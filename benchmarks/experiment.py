@@ -1,0 +1,82 @@
+"""Shared driver for the paper's evaluation protocol (feeds Table III, Fig. 4
+and Fig. 5 benchmarks).  Results are cached as JSON so the heavyweight
+adaptive-run campaign executes once."""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import asdict
+from pathlib import Path
+from typing import Dict, List
+
+from repro.dataflow import JobExperiment, window_stats
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts"
+
+# adaptive-run phases (paper Fig. 4: alternating normal / anomalous)
+def phase_plan(n_adaptive: int) -> List[bool]:
+    """True = anomalous (failure-injected) run."""
+    plan = []
+    for i in range(n_adaptive):
+        frac = i / max(n_adaptive - 1, 1)
+        plan.append(0.28 <= frac < 0.45 or 0.64 <= frac < 0.82)
+    return plan
+
+
+def run_job_campaign(job_key: str, method: str, *, n_profiling: int = 10,
+                     n_adaptive: int = 55, seed: int = 0) -> Dict:
+    exp = JobExperiment(job_key, seed=seed)
+    exp.profile(n_profiling)
+    plan = phase_plan(n_adaptive)
+    runs = []
+    for i, anomalous in enumerate(plan):
+        st = exp.adaptive_run(method, inject_failures=anomalous)
+        runs.append({**{k: v for k, v in asdict(st).items()},
+                     "anomalous": anomalous})
+    return {"job": job_key, "method": method, "target": exp.target,
+            "n_profiling": n_profiling, "runs": runs}
+
+
+def campaign_path(job_key: str, method: str, n_adaptive: int) -> Path:
+    return ARTIFACTS / "experiments" / f"{job_key}--{method}--{n_adaptive}.json"
+
+
+def get_or_run(job_key: str, method: str, *, n_profiling: int = 10,
+               n_adaptive: int = 55, seed: int = 0, verbose: bool = True
+               ) -> Dict:
+    p = campaign_path(job_key, method, n_adaptive)
+    if p.exists():
+        return json.loads(p.read_text())
+    t0 = time.time()
+    res = run_job_campaign(job_key, method, n_profiling=n_profiling,
+                           n_adaptive=n_adaptive, seed=seed)
+    res["wall_seconds"] = time.time() - t0
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(res))
+    if verbose:
+        print(f"[experiment] {job_key}/{method}/{n_adaptive}: "
+              f"{res['wall_seconds']:.0f}s")
+    return res
+
+
+def windows(n_profiling: int, n_adaptive: int, k: int = 5):
+    """k equal run-index windows over the adaptive range (Table III style)."""
+    lo = n_profiling + 1
+    hi = n_profiling + n_adaptive
+    edges = [lo + round(i * (hi - lo + 1) / k) for i in range(k)] + [hi + 1]
+    return [(edges[i], edges[i + 1] - 1) for i in range(k)]
+
+
+def campaign_window_stats(res: Dict, k: int = 5) -> List[Dict]:
+    import numpy as np
+    out = []
+    for (lo, hi) in windows(res["n_profiling"], len(res["runs"]), k):
+        sel = [r for r in res["runs"] if lo <= r["run_idx"] <= hi]
+        cvc = np.array([r["violation"] > 0 for r in sel], float)
+        cvs = np.array([r["violation"] / 60.0 for r in sel], float)
+        out.append({"window": f"{lo}-{hi}",
+                    "cvc_mean": float(cvc.mean()) if len(sel) else float("nan"),
+                    "cvc_median": float(np.median(cvc)) if len(sel) else float("nan"),
+                    "cvs_mean": float(cvs.mean()) if len(sel) else float("nan"),
+                    "cvs_median": float(np.median(cvs)) if len(sel) else float("nan")})
+    return out

@@ -1,0 +1,43 @@
+"""Fig. 5 analogue: time to fine-tune an Enel model and run inference, per
+job class (GBT decomposes into more components -> more graphs -> longer)."""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.dataflow import JOBS, JobExperiment
+
+
+def measure(job_key: str, seed: int = 0, repeats: int = 3) -> Dict:
+    exp = JobExperiment(job_key, seed=seed)
+    exp.profile(4)
+    fit_times, pred_times = [], []
+    n_comp = exp.job.n_components
+    for _ in range(repeats):
+        t0 = time.time()
+        exp.trainer.fit(exp.graph_history[-n_comp:], steps=60)
+        fit_times.append(time.time() - t0)
+        graphs = exp.graph_history[-n_comp:]
+        t0 = time.time()
+        exp.trainer.predict(graphs)
+        pred_times.append(time.time() - t0)
+    return {"job": job_key, "n_graphs": n_comp,
+            "fit_s_mean": float(np.mean(fit_times)),
+            "fit_s_std": float(np.std(fit_times)),
+            "predict_s_mean": float(np.mean(pred_times))}
+
+
+def main():
+    rows = []
+    for job in ("lr", "mpc", "kmeans", "gbt"):
+        r = measure(job)
+        rows.append(r)
+        print(f"fig5,{job},graphs={r['n_graphs']},fit={r['fit_s_mean']:.2f}s,"
+              f"predict={r['predict_s_mean']:.3f}s")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Fill EXPERIMENTS.md markers from artifacts (dry-run JSONs + campaign
+results + hillclimb iterations).
+
+    PYTHONPATH=src:. python -m benchmarks.make_report
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parent.parent
+DRYRUN = ROOT / "artifacts" / "dryrun"
+EXPS = ROOT / "artifacts" / "experiments"
+
+
+def _load(pattern: str):
+    return [json.loads(p.read_text()) for p in sorted(DRYRUN.glob(pattern))]
+
+
+def dryrun_summary() -> str:
+    lines = ["| arch | shape | mesh | status | flops/dev | bytes/dev | "
+             "coll bytes/dev | args (GB/dev) | temp (GB/dev) |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for mesh in ("pod1", "pod2"):
+        for r in _load(f"*--{mesh}.json"):
+            if r.get("status") == "skipped":
+                lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | "
+                             f"skip (long-ctx full-attn) | | | | | |")
+                continue
+            ma = r.get("memory_analysis", {})
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | {r['status']} | "
+                f"{r['flops_per_device']:.2e} | {r['bytes_per_device']:.2e} | "
+                f"{r['collective_bytes_per_device']:.2e} | "
+                f"{ma.get('argument_size_in_bytes', 0)/1e9:.2f} | "
+                f"{ma.get('temp_size_in_bytes', 0)/1e9:.2f} |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    from benchmarks.roofline import render
+    return render("pod1")
+
+
+def roofline_notes() -> str:
+    rows = [r for r in _load("*--pod1.json") if r.get("status") == "ok"]
+    notes = []
+    for r in rows:
+        t = r["roofline"]
+        dom = r["dominant"]
+        if dom == "t_memory":
+            fix = ("keep activations bf16 / fuse norm chains; raise arithmetic "
+                   "intensity (larger per-chip batch)")
+            if r["shape"].startswith("decode") or r["shape"] == "long_500k":
+                fix = "batch more sequences per chip; quantize the KV cache"
+            if r["arch"] == "xlstm-350m" and r["shape"] != "decode_32k":
+                fix = ("sLSTM is sequential: fuse the whole recurrence into "
+                       "one kernel so R stays in VMEM (mlstm_chunk-style)")
+        elif dom == "t_collective":
+            fix = ("fewer FSDP re-gathers (lower grad_accum), int8 grad "
+                   "all-reduce, keep experts EP-resident")
+        else:
+            fix = "already compute-bound: tune kernel block shapes"
+        notes.append(f"* `{r['arch']} x {r['shape']}`: dominant {dom[2:]} "
+                     f"({max(t.values()):.3f}s); useful-FLOPs "
+                     f"{r['useful_flops_ratio']:.2f}; next lever: {fix}")
+    return "\n".join(notes)
+
+
+def table3() -> str:
+    from benchmarks.table3_prediction import render, run
+    jobs = []
+    for j in ("lr", "mpc", "kmeans", "gbt"):
+        if (EXPS / f"{j}--enel--55.json").exists():
+            jobs.append(j)
+    if not jobs:
+        return "(campaign artifacts missing — run benchmarks.table3_prediction)"
+    return render(run(jobs=jobs, n_adaptive=55))
+
+
+def repro_claims() -> str:
+    out = []
+    for j in ("lr", "mpc", "kmeans", "gbt"):
+        pe = EXPS / f"{j}--enel--55.json"
+        pl = EXPS / f"{j}--ellis--55.json"
+        if not (pe.exists() and pl.exists()):
+            continue
+        re_ = json.loads(pe.read_text())
+        rl = json.loads(pl.read_text())
+        ve = [r["violation"] / 60 for r in re_["runs"]]
+        vl = [r["violation"] / 60 for r in rl["runs"]]
+        anom_e = [r["violation"] / 60 for r in re_["runs"] if r["anomalous"]]
+        anom_l = [r["violation"] / 60 for r in rl["runs"] if r["anomalous"]]
+        h1, h2 = np.array_split(np.array(ve), 2)
+        out.append(
+            f"* **{j}**: Enel CVS mean {np.mean(ve):.2f} m vs Ellis "
+            f"{np.mean(vl):.2f} m; Enel improves over time "
+            f"(1st half {h1.mean():.2f} -> 2nd half {h2.mean():.2f} m); "
+            f"anomalous-phase CVS: Enel {np.mean(anom_e):.2f} m vs Ellis "
+            f"{np.mean(anom_l):.2f} m "
+            f"({'more robust' if np.mean(anom_e) <= np.mean(anom_l) else 'less robust'} under failures)")
+    return "\n".join(out) if out else "(pending campaign)"
+
+
+def fig5() -> str:
+    try:
+        from benchmarks.fig5_timing import measure
+        # lr (few stages/component) vs gbt (most components+stages): the
+        # extremes the paper's Fig. 5 contrasts
+        rows = [measure(j, repeats=1) for j in ("lr", "gbt")]
+        lines = ["| job | graphs/run | fine-tune (s) | predict (s) |",
+                 "|---|---|---|---|"]
+        for r in rows:
+            lines.append(f"| {r['job']} | {r['n_graphs']} | "
+                         f"{r['fit_s_mean']:.2f} ± {r['fit_s_std']:.2f} | "
+                         f"{r['predict_s_mean']:.3f} |")
+        return "\n".join(lines)
+    except Exception as e:
+        return f"(fig5 failed: {e})"
+
+
+def perf_log() -> str:
+    cells = {
+        "olmoe-1b-7b--train_4k": ["-base", "-opt1", "-opt2", "-opt3"],
+        "arctic-480b--train_4k": ["-base", "-opt1", "-opt2", "-opt3"],
+        "xlstm-350m--train_4k": ["-base", "-opt1", "-opt2"],
+    }
+    lines = []
+    for cell, tags in cells.items():
+        lines.append(f"\n### {cell}\n")
+        lines.append("| variant | overrides | t_comp | t_mem | t_coll | "
+                     "dominant | useful | temp GB/dev |")
+        lines.append("|---|---|---|---|---|---|---|---|")
+        for tag in tags:
+            p = DRYRUN / f"{cell}--pod1{tag}.json"
+            if not p.exists():
+                continue
+            r = json.loads(p.read_text())
+            if r.get("status") != "ok":
+                lines.append(f"| {tag[1:]} | — | ERROR | | | | | |")
+                continue
+            t = r["roofline"]
+            ov = ",".join(f"{k}={v}" for k, v in
+                          (r.get("overrides") or {}).items()) or "(none)"
+            lines.append(
+                f"| {tag[1:]} | {ov} | {t['t_compute']:.3f} | "
+                f"{t['t_memory']:.3f} | {t['t_collective']:.3f} | "
+                f"{r['dominant'][2:]} | {r['useful_flops_ratio']:.3f} | "
+                f"{r['memory_analysis'].get('temp_size_in_bytes', 0)/1e9:.1f} |")
+    return "\n".join(lines)
+
+
+MARKERS = {
+    "<!-- TABLE3 -->": table3,
+    "<!-- REPRO-CLAIMS -->": repro_claims,
+    "<!-- FIG5 -->": fig5,
+    "<!-- DRYRUN-SUMMARY -->": dryrun_summary,
+    "<!-- ROOFLINE-TABLE -->": roofline_table,
+    "<!-- ROOFLINE-NOTES -->": roofline_notes,
+    "<!-- PERF-LOG -->": perf_log,
+}
+
+
+def main():
+    path = ROOT / "EXPERIMENTS.md"
+    template = ROOT / "benchmarks" / "EXPERIMENTS.template.md"
+    text = template.read_text()     # always regenerate from the template
+    for marker, fn in MARKERS.items():
+        if marker in text:
+            try:
+                content = fn()
+            except Exception as e:
+                content = f"(generation failed: {type(e).__name__}: {e})"
+            text = text.replace(marker, content)
+            print(f"[report] filled {marker}")
+    path.write_text(text)
+    print("[report] EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Qwen3-0.6B — GQA + qk-norm [hf:Qwen/Qwen3 family]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b",
+    family="dense",
+    n_layers=28,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=3072,
+    vocab_size=151936,
+    raw_vocab_size=151936,
+    qk_norm=True,
+    grad_accum=2,
+    tie_embeddings=True,
+    rope_theta=1_000_000.0,
+)

@@ -1,0 +1,92 @@
+"""Auto-encoder for dense low-dimensional context embeddings (paper §III-C).
+
+min || p - h(g(p)) ||^2 with encoder g: R^N -> R^M, decoder h, M << N.
+Pure JAX; trained with Adam on the pool of encoded property vectors.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.encoding import DEFAULT_L
+
+N_DIM = DEFAULT_L + 1
+EMBED_DIM = 8
+
+
+def init_autoencoder(key, n_dim: int = N_DIM, m_dim: int = EMBED_DIM,
+                     hidden: int = 24) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = lambda k, i, o: jax.random.normal(k, (i, o), jnp.float32) / jnp.sqrt(i)
+    return {
+        "enc_w1": s(k1, n_dim, hidden), "enc_b1": jnp.zeros(hidden),
+        "enc_w2": s(k2, hidden, m_dim), "enc_b2": jnp.zeros(m_dim),
+        "dec_w1": s(k3, m_dim, hidden), "dec_b1": jnp.zeros(hidden),
+        "dec_w2": s(k4, hidden, n_dim), "dec_b2": jnp.zeros(n_dim),
+    }
+
+
+def encode(params: Dict, p: jax.Array) -> jax.Array:
+    h = jnp.tanh(p @ params["enc_w1"] + params["enc_b1"])
+    return jnp.tanh(h @ params["enc_w2"] + params["enc_b2"])
+
+
+def decode(params: Dict, e: jax.Array) -> jax.Array:
+    h = jnp.tanh(e @ params["dec_w1"] + params["dec_b1"])
+    return h @ params["dec_w2"] + params["dec_b2"]
+
+
+def recon_loss(params: Dict, batch: jax.Array) -> jax.Array:
+    return jnp.mean(jnp.square(decode(params, encode(params, batch)) - batch))
+
+
+def _adam_update(params, opt, batch, lr):
+    loss, g = jax.value_and_grad(recon_loss)(params, batch)
+    mu, nu, t = opt
+    t = t + 1
+    mu = jax.tree_util.tree_map(lambda m, gg: 0.9 * m + 0.1 * gg, mu, g)
+    nu = jax.tree_util.tree_map(lambda v, gg: 0.999 * v + 0.001 * gg * gg, nu, g)
+    def upd(p, m, v):
+        mh = m / (1 - 0.9 ** t)
+        vh = v / (1 - 0.999 ** t)
+        return p - lr * mh / (jnp.sqrt(vh) + 1e-8)
+    params = jax.tree_util.tree_map(upd, params, mu, nu)
+    return params, (mu, nu, t), loss
+
+
+_adam_step = jax.jit(_adam_update)
+
+
+@jax.jit
+def _adam_run_fixed(params, opt, batch, lr):
+    def body(carry, _):
+        p, o = carry
+        p, o, loss = _adam_update(p, o, batch, lr)
+        return (p, o), loss
+    (params, opt), losses = jax.lax.scan(body, (params, opt), None, length=100)
+    return params, opt, losses[-1]
+
+
+def train_autoencoder(vectors: np.ndarray, *, steps: int = 300,
+                      lr: float = 1e-2, seed: int = 0
+                      ) -> Tuple[Dict, float]:
+    """Fit on the property-vector pool; returns (params, final_loss)."""
+    key = jax.random.PRNGKey(seed)
+    params = init_autoencoder(key)
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    opt = (zeros, jax.tree_util.tree_map(jnp.zeros_like, params),
+           jnp.zeros((), jnp.int32))
+    batch = jnp.asarray(vectors)
+    loss = jnp.inf
+    for _ in range(max(1, steps // 100)):
+        params, opt, loss = _adam_run_fixed(params, opt, batch, lr)
+    return params, float(loss)
+
+
+def embed_properties(params: Dict, vectors: np.ndarray) -> np.ndarray:
+    if vectors.shape[0] == 0:
+        return np.zeros((0, EMBED_DIM), np.float32)
+    return np.asarray(encode(params, jnp.asarray(vectors)))

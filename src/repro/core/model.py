@@ -1,0 +1,150 @@
+"""Enel's graph-propagation prediction model (paper §III-D, eqs. 3-7).
+
+Four 2-layer MLPs (f1..f4) + a GATv2-style attention vector define a spatial
+GNN over padded component DAGs:
+
+  eq.6  |e_ij| = softmax_j( a^T sigma( f3(x_i, x_j) ) ),  x = a_vec‖c‖z_vec
+  eq.7  m_hat_i = sum_j |e_ij| * f4( f3(x_i,x_j), m_j )   (metric propagation)
+  eq.3  o_hat_i = f1(c_i, m_i, a_vec_i, z_vec_i, r_i)     (rescale overhead)
+  eq.4  t_hat_i = f2(c_i, m_i, z_vec_i, o_hat_i)          (node runtime)
+  eq.5  tt_hat_i = t_hat_i + max_{j in N(i)} tt_hat_j     (critical path)
+
+Metric propagation runs level-synchronously (fori over MAX_NODES levels) so
+predictions flow to nodes whose real metrics are unobserved (future
+iterations), exactly the paper's online-inference mode.  ~5k parameters —
+"allows for training even using a CPU" (§IV-C).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import CTX_DIM, MAX_NODES, N_METRICS
+
+HIDDEN = 32
+EDGE_DIM = 16
+X_DIM = 3 + CTX_DIM + 3          # a_vec ‖ c ‖ z_vec
+MAX_LEVELS = 8                   # longest DAG chain the propagation supports
+
+
+def _mlp_init(key, dims):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": jax.random.normal(k, (i, o), jnp.float32) / jnp.sqrt(i),
+             "b": jnp.zeros(o, jnp.float32)}
+            for k, i, o in zip(ks, dims[:-1], dims[1:])]
+
+
+def _mlp(layers, x, final_linear=True):
+    for li, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if li < len(layers) - 1 or not final_linear:
+            x = jax.nn.leaky_relu(x, 0.1)
+    return x
+
+
+def init_enel(key) -> Dict:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        # eq.3: f1(c, m, a_vec, z_vec, r) -> overhead
+        "f1": _mlp_init(k1, [CTX_DIM + N_METRICS + 3 + 3 + 1, HIDDEN, 1]),
+        # eq.4: f2(c, m, z_vec, o_hat) -> runtime
+        "f2": _mlp_init(k2, [CTX_DIM + N_METRICS + 3 + 1, HIDDEN, 1]),
+        # eq.6: f3(x_i, x_j) -> edge hidden
+        "f3": _mlp_init(k3, [2 * X_DIM, HIDDEN, EDGE_DIM]),
+        # eq.7: f4(edge hidden, m_j) -> propagated metrics
+        "f4": _mlp_init(k4, [EDGE_DIM + N_METRICS, HIDDEN, N_METRICS]),
+        "attn_a": jax.random.normal(k5, (EDGE_DIM,), jnp.float32) / 4.0,
+    }
+
+
+def n_params(params: Dict) -> int:
+    return sum(int(l.size) for l in jax.tree_util.tree_leaves(params))
+
+
+def scaleout_vec(s: jax.Array) -> jax.Array:
+    s = jnp.maximum(s, 1e-6)
+    return jnp.stack([1.0 - 1.0 / s, jnp.log(s), s], axis=-1)
+
+
+def _edge_hidden(params, x):
+    """f3 on all (i, j) pairs -> (N, N, EDGE_DIM); i = dst, j = src."""
+    n = x.shape[0]
+    xi = jnp.broadcast_to(x[:, None, :], (n, n, x.shape[-1]))
+    xj = jnp.broadcast_to(x[None, :, :], (n, n, x.shape[-1]))
+    return _mlp(params["f3"], jnp.concatenate([xi, xj], axis=-1))
+
+
+def edge_weights(params, x, adj) -> Tuple[jax.Array, jax.Array]:
+    """eq.6: masked softmax over predecessors. Returns (e (N,N), h3 (N,N,E))."""
+    h3 = _edge_hidden(params, x)
+    logits = jnp.einsum("ije,e->ij", jax.nn.leaky_relu(h3, 0.1),
+                        params["attn_a"])
+    logits = jnp.where(adj, logits, -1e30)
+    has_pred = adj.any(axis=1, keepdims=True)
+    e = jax.nn.softmax(logits, axis=1)
+    return jnp.where(has_pred, e, 0.0), h3
+
+
+def forward(params: Dict, g: Dict) -> Dict[str, jax.Array]:
+    """Full propagation over one padded graph (dict of (N,...) arrays).
+
+    Returns overhead/runtime/accumulated-runtime/propagated-metric predictions.
+    """
+    a_vec = scaleout_vec(g["a_raw"])
+    z_vec = scaleout_vec(g["z_raw"])
+    x = jnp.concatenate([a_vec, g["context"], z_vec], axis=-1)
+    adj = g["adj"] & g["mask"][None, :] & g["mask"][:, None]
+    e, h3 = edge_weights(params, x, adj)
+
+    # eq.7 metric propagation, level-synchronous: observed metrics are fixed
+    # inputs; unobserved nodes adopt propagated estimates as they stabilize.
+    m_obs = g["metrics"]
+    valid = g["metrics_valid"]
+
+    def level_step(_, m_cur):
+        mj = jnp.where(valid[:, None], m_obs, m_cur)            # (N, M)
+        f4_in = jnp.concatenate(
+            [h3, jnp.broadcast_to(mj[None, :, :], h3.shape[:2] + (N_METRICS,))],
+            axis=-1)
+        msg = _mlp(params["f4"], f4_in)                          # (N,N,M)
+        m_prop = jnp.einsum("ij,ijm->im", e, msg)
+        return jnp.where(valid[:, None], m_obs, m_prop)
+
+    m_hat = jax.lax.fori_loop(0, MAX_LEVELS, level_step, m_obs)
+    m_used = jnp.where(valid[:, None], m_obs, m_hat)
+
+    # eq.3 overhead
+    f1_in = jnp.concatenate([g["context"], m_used, a_vec, z_vec,
+                             g["r"][:, None]], axis=-1)
+    o_hat = _mlp(params["f1"], f1_in)[:, 0]
+
+    # eq.4 runtime (end scale-out only + predicted overhead)
+    f2_in = jnp.concatenate([g["context"], m_used, z_vec,
+                             o_hat[:, None]], axis=-1)
+    t_hat = jax.nn.softplus(_mlp(params["f2"], f2_in)[:, 0])
+
+    # eq.5 accumulated runtime over the DAG (summary nodes excluded)
+    t_node = jnp.where(g["mask"] & ~g["is_summary"], t_hat, 0.0)
+    real_edge = adj & ~g["is_summary"][None, :]       # drop summary precedents
+
+    def acc_step(_, tt):
+        pred_best = jnp.max(
+            jnp.where(real_edge, tt[None, :], 0.0), axis=1)
+        return t_node + pred_best
+
+    tt_hat = jax.lax.fori_loop(0, MAX_LEVELS, acc_step, t_node)
+    tt_hat = jnp.where(g["mask"] & ~g["is_summary"], tt_hat, 0.0)
+
+    return {"overhead": o_hat, "runtime": t_hat, "acc_runtime": tt_hat,
+            "metrics": m_hat, "edges": e,
+            "total_runtime": jnp.max(tt_hat)}
+
+
+forward_batch = jax.vmap(forward, in_axes=(None, 0))
+
+
+def predict_total_runtime(params: Dict, graphs: Dict) -> jax.Array:
+    """Total predicted runtime per component graph in a stacked batch."""
+    return forward_batch(params, graphs)["total_runtime"]

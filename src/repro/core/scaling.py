@@ -1,0 +1,100 @@
+"""Enel's dynamic scale-out optimizer (paper §IV-A).
+
+Upon each request: fine-tune the global model with the freshest run data
+(handled by EnelTrainer), construct the *remaining* component graphs from
+static component characteristics (a graph_builder supplied by the job layer),
+attach P/H summary nodes, run propagation for EVERY candidate scale-out in
+the valid range, and pick the configuration that best complies with the
+runtime target (smallest scale-out among the feasible; else the argmin).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.bell import BellModel, initial_scaleout
+from repro.core.graph import (ComponentGraph, NodeAttrs, historical_summary,
+                              summary_node)
+from repro.core.training import EnelTrainer
+
+# graph_builder(comp_idx, a, z, predecessors) -> ComponentGraph with
+# unobserved metrics/runtimes; predecessors = list of summary NodeAttrs.
+GraphBuilder = Callable[[int, float, float, List[NodeAttrs]], ComponentGraph]
+
+
+class EnelScaler:
+    def __init__(self, trainer: EnelTrainer, scaleout_range: Tuple[int, int],
+                 beta: int = 3, candidate_stride: int = 1):
+        self.trainer = trainer
+        self.range = scaleout_range
+        self.beta = beta
+        self.candidate_stride = max(1, candidate_stride)
+        # historical summary nodes per component index (across runs)
+        self.hist_summaries: Dict[int, List[NodeAttrs]] = defaultdict(list)
+        # first-component (scaleout, runtime) pairs for Bell initial alloc
+        self.first_component_history: List[Tuple[float, float]] = []
+
+    # --------------------------------------------------------------- history
+    def record_component(self, comp_idx: int, nodes: Sequence[NodeAttrs],
+                         runtime: float) -> None:
+        self.hist_summaries[comp_idx].append(
+            summary_node(nodes, name=f"P{comp_idx}"))
+        if comp_idx == 0:
+            scaleout = nodes[-1].end_scaleout
+            self.first_component_history.append((scaleout, runtime))
+
+    # ------------------------------------------------------------ initial alloc
+    def initial_allocation(self, target_runtime: float,
+                           n_components: int) -> int:
+        """Bell on the first component + Enel on the rest (paper §IV-A)."""
+        if len(self.first_component_history) < 3:
+            return max(self.range[0], (self.range[0] + self.range[1]) // 2)
+        lo, hi = self.range
+        per_comp_target = target_runtime / max(n_components, 1)
+        return initial_scaleout(self.first_component_history,
+                                per_comp_target, (lo, hi))
+
+    # ------------------------------------------------------------- recommend
+    def recommend(self, *, graph_builder: GraphBuilder, next_comp: int,
+                  n_components: int, elapsed: float, current_scaleout: int,
+                  target_runtime: float,
+                  current_summary: Optional[NodeAttrs] = None
+                  ) -> Tuple[int, float, Dict[int, float]]:
+        """Returns (scaleout, predicted_total, per-candidate totals)."""
+        lo, hi = self.range
+        candidates = sorted(set(range(lo, hi + 1, self.candidate_stride))
+                            | {hi, current_scaleout})
+        candidates = [s for s in candidates if lo <= s <= hi]
+        totals: Dict[int, float] = {}
+        remaining_idx = list(range(next_comp, n_components))
+        if not remaining_idx:
+            return current_scaleout, elapsed, totals
+
+        # one vmapped forward over all (candidate x remaining-component) graphs
+        all_graphs: List[ComponentGraph] = []
+        for s in candidates:
+            for k in remaining_idx:
+                # P(k-1)/H(k-1) are predecessors of G(k)'s roots (paper Fig.3)
+                preds: List[NodeAttrs] = []
+                if k == next_comp and current_summary is not None:
+                    preds.append(current_summary)        # P of the just-finished comp
+                if k > 0:
+                    h = historical_summary(self.hist_summaries.get(k - 1, []),
+                                           float(s), beta=self.beta)
+                    if h is not None:
+                        preds.append(h)
+                a = current_scaleout if k == next_comp else s
+                all_graphs.append(graph_builder(k, float(a), float(s), preds))
+        per_comp = self.trainer.predict(all_graphs).reshape(
+            len(candidates), len(remaining_idx))
+        for i, s in enumerate(candidates):
+            totals[s] = elapsed + float(per_comp[i].sum())
+
+        feasible = [s for s in candidates if totals[s] <= target_runtime]
+        if feasible:
+            best = min(feasible)                 # cheapest compliant scale-out
+        else:
+            best = min(totals, key=totals.get)   # least violation
+        return best, totals[best], totals

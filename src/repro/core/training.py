@@ -1,0 +1,164 @@
+"""Enel model training / fine-tuning (paper §IV-A, §V-B.3).
+
+Targets: observed node runtimes, observed rescale overheads and observed
+metric vectors (propagation loss).  Adam over the ~5k-parameter model; a
+"retrain from scratch every 5th run, fine-tune in between" policy mirroring
+the paper's protocol lives in :class:`EnelTrainer`.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import model as enel_model
+from repro.core.graph import ComponentGraph, stack_graphs
+
+HUBER_DELTA = 10.0
+
+
+def _huber(err: jax.Array, delta: float = HUBER_DELTA) -> jax.Array:
+    a = jnp.abs(err)
+    return jnp.where(a <= delta, 0.5 * err * err, delta * (a - 0.5 * delta))
+
+
+def enel_loss(params: Dict, batch: Dict) -> Tuple[jax.Array, Dict]:
+    out = enel_model.forward_batch(params, batch)
+    rt_mask = batch["runtime_valid"] & batch["mask"] & ~batch["is_summary"]
+    rt_err = jnp.where(rt_mask, out["runtime"] - batch["runtime"], 0.0)
+    l_rt = jnp.sum(_huber(rt_err)) / jnp.maximum(rt_mask.sum(), 1)
+
+    ov_mask = batch["overhead_valid"] & batch["mask"]
+    ov_err = jnp.where(ov_mask, out["overhead"] - batch["overhead"], 0.0)
+    l_ov = jnp.sum(_huber(ov_err)) / jnp.maximum(ov_mask.sum(), 1)
+
+    # metric propagation loss: predict observed metrics from predecessors
+    m_mask = (batch["metrics_valid"] & batch["mask"])[..., None]
+    m_err = jnp.where(m_mask, out["metrics"] - batch["metrics"], 0.0)
+    l_m = jnp.sum(jnp.square(m_err)) / jnp.maximum(m_mask.sum(), 1)
+
+    loss = l_rt + l_ov + 0.5 * l_m
+    return loss, {"runtime": l_rt, "overhead": l_ov, "metrics": l_m}
+
+
+def _adam_update(params, opt, batch, lr):
+    (loss, parts), g = jax.value_and_grad(enel_loss, has_aux=True)(params, batch)
+    mu, nu, t = opt
+    t = t + 1
+    mu = jax.tree_util.tree_map(lambda m, gg: 0.9 * m + 0.1 * gg, mu, g)
+    nu = jax.tree_util.tree_map(lambda v, gg: 0.999 * v + 0.001 * gg * gg,
+                                nu, g)
+
+    def upd(p, m, v):
+        mh = m / (1 - 0.9 ** t)
+        vh = v / (1 - 0.999 ** t)
+        return p - lr * mh / (jnp.sqrt(vh) + 1e-8)
+
+    return jax.tree_util.tree_map(upd, params, mu, nu), (mu, nu, t), loss
+
+
+_adam_step = jax.jit(_adam_update)
+
+
+@functools.partial(jax.jit, static_argnums=3)
+def _adam_run(params, opt, batch, steps, lr):
+    """`steps` Adam updates fused into one jit (dispatch-bound otherwise)."""
+    def body(carry, _):
+        p, o = carry
+        p, o, loss = _adam_update(p, o, batch, lr)
+        return (p, o), loss
+
+    (params, opt), losses = jax.lax.scan(body, (params, opt), None,
+                                         length=steps)
+    return params, opt, losses[-1]
+
+
+class EnelTrainer:
+    """One global reusable model + the paper's (re)training cadence."""
+
+    def __init__(self, seed: int = 0, lr: float = 5e-3):
+        self.seed = seed
+        self.lr = lr
+        self.params = enel_model.init_enel(jax.random.PRNGKey(seed))
+        self._reset_opt()
+        self.runs_seen = 0
+        self.last_fit_seconds = 0.0
+
+    def _reset_opt(self):
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, self.params)
+        self.opt = (zeros, jax.tree_util.tree_map(jnp.zeros_like, self.params),
+                    jnp.zeros((), jnp.int32))
+
+    def n_params(self) -> int:
+        return enel_model.n_params(self.params)
+
+    def fit(self, graphs: Sequence[ComponentGraph], *, steps: int = 200,
+            from_scratch: bool = False, metric_dropout: float = 0.5) -> float:
+        """Train on a set of component graphs; returns final loss.
+
+        ``metric_dropout`` appends a copy of the batch with task-set metrics
+        masked out (summary nodes kept), so runtime prediction is also trained
+        through the metric-PROPAGATION path — the exact configuration used
+        during online inference on not-yet-executed iterations (§III-D).
+        """
+        if not graphs:
+            return float("nan")
+        t0 = time.time()
+        if from_scratch:
+            self.params = enel_model.init_enel(jax.random.PRNGKey(self.seed))
+            self._reset_opt()
+        graphs = list(graphs)
+        # bucket the batch to a power of two with empty (all-masked) graphs so
+        # jit caches a handful of shapes instead of one per history length
+        from repro.core.graph import build_graph
+        n = len(graphs)
+        bucket = 1
+        while bucket < n:
+            bucket *= 2
+        graphs = graphs + [build_graph([], [])] * (bucket - n)
+        stacked = stack_graphs(graphs)
+        if metric_dropout > 0:
+            rng = np.random.RandomState(self.seed + self.runs_seen)
+            aug = {k: v.copy() for k, v in stacked.items()}
+            drop = (rng.rand(*aug["metrics_valid"].shape) < metric_dropout)
+            drop &= ~aug["is_summary"]
+            aug["metrics_valid"] = aug["metrics_valid"] & ~drop
+            stacked = {k: np.concatenate([stacked[k], aug[k]])
+                       for k in stacked}
+        batch = {k: jnp.asarray(v) for k, v in stacked.items()}
+        # round steps to the nearest power of two (jit cache friendliness)
+        p2 = 1 << max(0, (max(steps, 1)).bit_length() - 1)
+        steps = max(8, min(512, p2 if steps - p2 < p2 else p2 * 2))
+        self.params, self.opt, loss = _adam_run(
+            self.params, self.opt, batch, steps, self.lr)
+        self.last_fit_seconds = time.time() - t0
+        return float(loss)
+
+    def observe_run(self, latest: Sequence[ComponentGraph],
+                    history: Optional[Sequence[ComponentGraph]] = None,
+                    retrain_every: int = 5, steps: int = 200,
+                    fine_tune_steps: int = 60) -> float:
+        """Paper cadence (§V-B.3): train a new model from scratch on the
+        history window every `retrain_every` runs, fine-tune on the newest
+        run's graphs in between."""
+        self.runs_seen += 1
+        scratch = (self.runs_seen % retrain_every) == 0 and history is not None
+        if scratch:
+            return self.fit(history, steps=steps, from_scratch=True)
+        return self.fit(latest, steps=fine_tune_steps)
+
+    def predict(self, graphs: Sequence[ComponentGraph]) -> np.ndarray:
+        """Per-component total-runtime predictions (seconds)."""
+        from repro.core.graph import build_graph
+        n = len(graphs)
+        bucket = 1
+        while bucket < n:
+            bucket *= 2
+        padded = list(graphs) + [build_graph([], [])] * (bucket - n)
+        batch = {k: jnp.asarray(v) for k, v in stack_graphs(padded).items()}
+        return np.asarray(
+            enel_model.predict_total_runtime(self.params, batch))[:n]

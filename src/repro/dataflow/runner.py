@@ -1,0 +1,224 @@
+"""The paper's experiment protocol (§V-B): profiling runs, adaptive runs with
+dynamic scaling (Enel vs Ellis), failure phases, CVC/CVS metrics.
+
+Per job: 10 profiling runs (no scaling) -> initial model fit -> adaptive runs
+where the scaler is consulted at every component boundary.  Enel retrains
+from scratch every 5th run and fine-tunes otherwise; Ellis refits its
+per-component model ensemble after every run.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.graph import (ComponentGraph, NodeAttrs, build_graph,
+                              historical_summary, summary_node)
+from repro.core.scaling import EnelScaler
+from repro.core.ellis import EllisScaler
+from repro.core.training import EnelTrainer
+from repro.dataflow.context import ContextEncoder
+from repro.dataflow.simulator import (ClusterSim, ComponentRecord, RunRecord,
+                                      rescale_overhead)
+from repro.dataflow.workloads import JOBS, SCALEOUT_RANGE, JobSpec
+
+PROFILING_SCALEOUTS = [4, 8, 11, 14, 18, 21, 25, 28, 32, 36]
+HISTORY_WINDOW = 96           # newest graphs kept for scratch retraining
+
+
+@dataclass
+class RunStats:
+    run_idx: int
+    kind: str                 # profiling | enel | ellis
+    runtime: float
+    target: float
+    violation: float
+    predicted: Optional[float] = None
+    scaleouts: List[int] = field(default_factory=list)
+    n_failures: int = 0
+    fit_seconds: float = 0.0
+    decide_seconds: float = 0.0
+
+    @property
+    def cvc(self) -> int:
+        return int(self.violation > 0)
+
+
+def _component_nodes(encoder: ContextEncoder, job: JobSpec,
+                     comp: ComponentRecord) -> List[NodeAttrs]:
+    nodes = []
+    for st in comp.stages:
+        ctx = encoder.node_context(job, st.name, int(st.end_scaleout * 4),
+                                   attempt=st.failures)
+        nodes.append(NodeAttrs(
+            name=st.name, context=ctx, metrics=st.metrics,
+            start_scaleout=st.start_scaleout, end_scaleout=st.end_scaleout,
+            time_fraction=st.time_fraction, runtime=st.runtime,
+            overhead=st.overhead if st.overhead > 0 else None))
+    return nodes
+
+
+def _future_nodes(encoder: ContextEncoder, job: JobSpec, comp_idx: int,
+                  a: float, z: float) -> List[NodeAttrs]:
+    nodes = []
+    for i, spec in enumerate(job.stages(comp_idx)):
+        ctx = encoder.node_context(job, spec.name, int(z * 4))
+        nodes.append(NodeAttrs(
+            name=spec.name, context=ctx, metrics=None,
+            start_scaleout=a if i == 0 else z, end_scaleout=z,
+            time_fraction=1.0 if a == z else 0.8))
+    return nodes
+
+
+def _to_graph(nodes: List[NodeAttrs], preds: List[NodeAttrs],
+              comp_idx: int) -> ComponentGraph:
+    n = len(nodes)
+    all_nodes = nodes + preds
+    edges = [(i, i + 1) for i in range(n - 1)]
+    edges += [(n + j, 0) for j in range(len(preds))]
+    return build_graph(all_nodes, edges, component_id=comp_idx)
+
+
+class JobExperiment:
+    """Shared environment for one job: simulator, encoder, both scalers."""
+
+    def __init__(self, job_key: str, seed: int = 0,
+                 candidate_stride: int = 2):
+        self.job = JOBS[job_key]
+        self.job_key = job_key
+        self.sim = ClusterSim(seed=seed)
+        self.encoder = ContextEncoder([self.job], seed=seed)
+        self.trainer = EnelTrainer(seed=seed)
+        self.enel = EnelScaler(self.trainer, SCALEOUT_RANGE,
+                               candidate_stride=candidate_stride)
+        self.ellis = EllisScaler(SCALEOUT_RANGE,
+                                 rescale_overhead=rescale_overhead(4, 8),
+                                 candidate_stride=candidate_stride)
+        # decision cadence: every component for short jobs, every 2nd for
+        # the 22-component LR/MPC (keeps the campaign tractable on 1 core)
+        self.decision_interval = 2 if self.job.n_components > 15 else 1
+        self.graph_history: List[ComponentGraph] = []
+        self.target: Optional[float] = None
+        self.stats: List[RunStats] = []
+        self._run_idx = 0
+
+    # ------------------------------------------------------------ execution
+    def _execute(self, *, scaler: Optional[str], inject_failures: bool,
+                 initial_s: int) -> Tuple[RunRecord, List[ComponentGraph],
+                                          List[int], float]:
+        job = self.job
+        run = RunRecord(job.name, self.target or 0.0)
+        clock = 0.0
+        s_prev = s = initial_s
+        scaleouts = [s]
+        run_graphs: List[ComponentGraph] = []
+        prev_summary: Optional[NodeAttrs] = None
+        decide_s = 0.0
+        for k in range(job.n_components):
+            comp = self.sim.run_component(
+                job, k, clock=clock, start_scaleout=s_prev, end_scaleout=s,
+                inject_failures=inject_failures, failures_log=run.failures)
+            run.components.append(comp)
+            clock += comp.runtime
+            nodes = _component_nodes(self.encoder, job, comp)
+            preds = [p for p in (prev_summary,) if p is not None]
+            if k > 0:
+                h = historical_summary(
+                    self.enel.hist_summaries.get(k - 1, []), float(s))
+                if h is not None:
+                    preds.append(h)
+            run_graphs.append(_to_graph(nodes, preds, k))
+            # record AFTER building this graph (history = previous runs only)
+            self.enel.record_component(k, nodes, comp.runtime)
+            self.ellis.observe_component(k, comp.scaleout, comp.runtime)
+            prev_summary = summary_node(nodes, name=f"P{k}")
+            s_prev = s
+            # --- dynamic scaling decision at the component boundary
+            if scaler and k < job.n_components - 1 and \
+                    k % self.decision_interval == 0:
+                t0 = time.time()
+                if scaler == "enel":
+                    builder = lambda ci, a, z, pr: _to_graph(
+                        _future_nodes(self.encoder, job, ci, a, z), pr, ci)
+                    s_new, _, _ = self.enel.recommend(
+                        graph_builder=builder, next_comp=k + 1,
+                        n_components=job.n_components, elapsed=clock,
+                        current_scaleout=s, target_runtime=self.target,
+                        current_summary=prev_summary)
+                else:
+                    s_new, _ = self.ellis.recommend(
+                        next_comp=k + 1, n_components=job.n_components,
+                        elapsed=clock, current_scaleout=s,
+                        target_runtime=self.target)
+                decide_s += time.time() - t0
+                if s_new != s:
+                    run.rescales.append((k + 1, s, s_new))
+                    s = s_new
+                    scaleouts.append(s)
+        return run, run_graphs, scaleouts, decide_s
+
+    # ------------------------------------------------------------ profiling
+    def profile(self, n_runs: int = 10) -> None:
+        for i in range(n_runs):
+            s = PROFILING_SCALEOUTS[i % len(PROFILING_SCALEOUTS)]
+            run, graphs, scaleouts, _ = self._execute(
+                scaler=None, inject_failures=False, initial_s=s)
+            self.graph_history.extend(graphs)
+            self._run_idx += 1
+            self.stats.append(RunStats(self._run_idx, "profiling",
+                                       run.runtime, 0.0, 0.0,
+                                       scaleouts=scaleouts))
+        runtimes = [st.runtime for st in self.stats if st.kind == "profiling"]
+        # target: slightly under the median profiled runtime, so meeting it
+        # requires actively choosing good scale-outs (cf. §V-B.3)
+        self.target = float(np.median(runtimes) * 0.95)
+        for st in self.stats:
+            st.target = self.target
+            st.violation = max(0.0, st.runtime - self.target)
+        self.ellis.refit()
+        self.trainer.fit(self.graph_history[-HISTORY_WINDOW:],
+                         steps=160, from_scratch=True)
+
+    # -------------------------------------------------------------- adaptive
+    def adaptive_run(self, method: str, inject_failures: bool) -> RunStats:
+        assert self.target is not None, "profile() first"
+        job = self.job
+        # fair initial allocation for both methods (paper §V-B.3): Ellis'
+        # per-component models pick the cheapest compliant scale-out
+        s0, predicted = self.ellis.recommend(
+            next_comp=0, n_components=job.n_components, elapsed=0.0,
+            current_scaleout=SCALEOUT_RANGE[0], target_runtime=self.target)
+        run, graphs, scaleouts, decide_s = self._execute(
+            scaler=method, inject_failures=inject_failures, initial_s=s0)
+        self.graph_history.extend(graphs)
+        self._run_idx += 1
+        fit_s = 0.0
+        if method == "enel":
+            t0 = time.time()
+            self.trainer.observe_run(
+                graphs, history=self.graph_history[-HISTORY_WINDOW:],
+                retrain_every=5, steps=160, fine_tune_steps=60)
+            fit_s = time.time() - t0
+        else:
+            self.ellis.refit()
+        st = RunStats(self._run_idx, method, run.runtime, self.target,
+                      run.violation, predicted=predicted,
+                      scaleouts=scaleouts, n_failures=len(run.failures),
+                      fit_seconds=fit_s, decide_seconds=decide_s)
+        self.stats.append(st)
+        return st
+
+
+def window_stats(stats: List[RunStats], lo: int, hi: int) -> Dict[str, float]:
+    """CVC/CVS aggregates over adaptive runs lo..hi (1-based, inclusive)."""
+    sel = [s for s in stats if s.kind != "profiling" and lo <= s.run_idx <= hi]
+    if not sel:
+        return {"cvc_mean": float("nan"), "cvc_median": float("nan"),
+                "cvs_mean": float("nan"), "cvs_median": float("nan")}
+    cvc = np.array([s.cvc for s in sel], float)
+    cvs = np.array([s.violation / 60.0 for s in sel], float)   # minutes
+    return {"cvc_mean": float(cvc.mean()), "cvc_median": float(np.median(cvc)),
+            "cvs_mean": float(cvs.mean()), "cvs_median": float(np.median(cvs)),
+            "n": len(sel)}

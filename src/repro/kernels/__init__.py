@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the framework's compute hot-spots.  Each package:
+#   kernel.py  pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+#   ops.py     jit'd public wrapper (layout/padding handling)
+#   ref.py     pure-jnp oracle defining the semantics (tests assert_allclose)
+# Kernels are validated with interpret=True on CPU; the dry-run lowers the
+# pure-jnp model path since the CPU backend cannot lower TPU Pallas
+# (DESIGN.md §6).

@@ -1,0 +1,106 @@
+"""Flash attention (training/prefill) as a Pallas TPU kernel.
+
+Online-softmax tiling: grid (batch, q_head, q_blocks, kv_blocks) with the KV
+block as the innermost (sequential on TPU) axis; running (m, l, acc) live in
+VMEM scratch across KV steps.  Supports GQA (kv-head indexed q_head//group),
+causal + sliding-window masks and gemma-style logit softcap.  Block sizes
+default to MXU-aligned 128x128 tiles; VMEM working set per step is
+q(Bq x D) + k,v(Bk x D) + acc(Bq x D) + scores(Bq x Bk) — ~1.3 MB at
+Bq=Bk=128, D=128 in f32, far under the ~128 MB v5e VMEM budget, leaving the
+pipeliner headroom to double-buffer the K/V streams.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            sm_scale: float, causal: bool, window: int, softcap: float,
+            bq: int, bk: int, nk: int, kv_len: int):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)           # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * sm_scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+
+    qi = pl.program_id(2)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < kv_len                  # drop padded keys
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 128,
+                    block_k: int = 128, kv_len: int = 0,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, H, Sq, D); k, v: (B, Kh, Sk, D) with H % Kh == 0.
+    Returns (B, H, Sq, D).  kv_len masks padded keys (0 = all valid)."""
+    b, h, sq, d = q.shape
+    _, kh, sk, _ = k.shape
+    assert h % kh == 0, (h, kh)
+    group = h // kh
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    nq, nk = sq // bq, sk // bk
+    sm_scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(_kernel, sm_scale=sm_scale, causal=causal,
+                               window=window, softcap=softcap, bq=bq, bk=bk,
+                               nk=nk, kv_len=kv_len or sk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, q_, k_, g=group: (b_, h_ // g, k_, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, q_, k_, g=group: (b_, h_ // g, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,37 @@
+"""Jit'd public wrapper: (B, S, H, D)-layout flash attention with padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+        window: int = 0, softcap: float = 0.0, block_q: int = 128,
+        block_k: int = 128, interpret: bool = True) -> jax.Array:
+    """q: (B, S, H, D); k, v: (B, S, Kh, D) -> (B, S, H, D).
+
+    Pads S up to the block size, transposes to the kernel's (B, H, S, D)
+    layout and back.  Padding keys are masked out by causality (they sit
+    after every real query) plus an explicit tail mask for the non-causal
+    case is unnecessary here because padded queries are dropped on return.
+    """
+    b, s, h, d = q.shape
+    bq = min(block_q, max(8, 1 << (s - 1).bit_length()))
+    pad = (-s) % bq
+    if pad:
+        zq = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        q, k, v = (jnp.pad(x, zq) for x in (q, k, v))
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          softcap=softcap, block_q=bq, block_k=block_k,
+                          kv_len=s, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)[:, :s]

@@ -1,0 +1,91 @@
+"""Flash-decode: one-token attention against a long KV cache.
+
+Grid (batch, q_head, kv_blocks); the KV block axis is innermost/sequential,
+carrying the partial-softmax state (m, l, acc) in VMEM scratch — the classic
+split-K decode kernel adapted to TPU grid semantics.  The current decode
+position arrives as a (1, 1) i32 operand so block (kv > pos) contributions
+are masked; on real TPUs this would live in SMEM via scalar prefetch, which
+changes none of the math validated here.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            sm_scale: float, window: int, bk: int, nk: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[0, 0]
+    q = q_ref[0, 0].astype(jnp.float32)            # (1, d)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = (q @ k.T) * sm_scale                       # (1, bk)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    mask = k_pos <= pos
+    if window:
+        mask &= k_pos > pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p)
+    acc_ref[...] = acc_ref[...] * alpha + (p @ v)[0]
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array, *,
+                 window: int = 0, block_k: int = 128,
+                 interpret: bool = True) -> jax.Array:
+    """q: (B, H, D); k, v: (B, Kh, S, D); pos: scalar i32.
+    Returns (B, H, D) = softmax over cache positions <= pos."""
+    b, h, d = q.shape
+    _, kh, sk, _ = k.shape
+    group = h // kh
+    bk = min(block_k, sk)
+    assert sk % bk == 0
+    nk = sk // bk
+    kernel = functools.partial(_kernel, sm_scale=1.0 / math.sqrt(d),
+                               window=window, bk=bk, nk=nk)
+    pos_arr = jnp.reshape(pos.astype(jnp.int32), (1, 1))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b_, h_, k_: (0, 0)),
+            pl.BlockSpec((1, 1, d), lambda b_, h_, k_: (b_, h_, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, k_, g=group: (b_, h_ // g, k_, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, k_, g=group: (b_, h_ // g, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b_, h_, k_: (b_, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((d,), jnp.float32),
+            pltpu.VMEM((), jnp.float32),
+            pltpu.VMEM((), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, q, k, v)

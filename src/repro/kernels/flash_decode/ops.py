@@ -1,0 +1,21 @@
+"""Jit'd wrapper for cache-layout decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.kernel import flash_decode
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def decode_attn(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
+                pos: jax.Array, *, window: int = 0, block_k: int = 128,
+                interpret: bool = True) -> jax.Array:
+    """q: (B, 1, H, D); cache_{k,v}: (B, S, Kh, D) -> (B, 1, H, D)."""
+    b, _, h, d = q.shape
+    out = flash_decode(q[:, 0], cache_k.transpose(0, 2, 1, 3),
+                       cache_v.transpose(0, 2, 1, 3), pos, window=window,
+                       block_k=block_k, interpret=interpret)
+    return out[:, None]

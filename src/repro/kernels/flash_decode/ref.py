@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for flash-decode."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def decode_ref(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array, *,
+               window: int = 0) -> jax.Array:
+    """q: (B, H, D); k, v: (B, Kh, S, D); pos scalar -> (B, H, D)."""
+    b, h, d = q.shape
+    _, kh, sk, _ = k.shape
+    group = h // kh
+    k = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    v = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), k) / math.sqrt(d)
+    kp = jnp.arange(sk)
+    mask = kp <= pos
+    if window:
+        mask &= kp > pos - window
+    s = jnp.where(mask[None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p, v).astype(q.dtype)

@@ -1,0 +1,21 @@
+"""Jit'd wrapper producing the kernel inputs from raw Mamba quantities."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba_scan.kernel import mamba_scan
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def selective_scan(dt: jax.Array, a: jax.Array, x: jax.Array, b: jax.Array,
+                   c: jax.Array, *, chunk: int = 64, block_d: int = 128,
+                   interpret: bool = True) -> jax.Array:
+    """dt: (B,S,D) softplus'd; a: (D,N) negative; x: (B,S,D); b,c: (B,S,N).
+    Returns y: (B,S,D) = the SSM output (without the D*x skip term)."""
+    decay = jnp.exp(dt[..., None] * a)                        # (B,S,D,N)
+    drive = (dt * x)[..., None] * b[:, :, None, :]
+    return mamba_scan(decay, drive, c, chunk=chunk, block_d=block_d,
+                      interpret=interpret)

@@ -1,0 +1,25 @@
+"""Strict per-step oracle for the Mamba selective-scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(decay: jax.Array, drive: jax.Array,
+                   c: jax.Array) -> jax.Array:
+    """decay, drive: (B, S, D, N); c: (B, S, N) -> y: (B, S, D)."""
+    b, s, d, n = decay.shape
+    f32 = jnp.float32
+
+    def step(h, xs):
+        a_t, b_t, c_t = xs
+        h = a_t * h + b_t                           # (B, D, N)
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (decay.astype(f32).transpose(1, 0, 2, 3),
+          drive.astype(f32).transpose(1, 0, 2, 3),
+          c.astype(f32).transpose(1, 0, 2))
+    h0 = jnp.zeros((b, d, n), f32)
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2).astype(decay.dtype)

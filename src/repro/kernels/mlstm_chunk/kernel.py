@@ -1,0 +1,97 @@
+"""Chunkwise mLSTM (xLSTM matrix-memory) as a Pallas TPU kernel.
+
+Grid (batch, head, chunks); the chunk axis is innermost/sequential, carrying
+the inter-chunk state (C: (D, D), n: (D,), m: scalar) in VMEM scratch —
+exactly the recurrence of `repro.models.ssm.mlstm_chunk_scan`, with the
+within-chunk part computed as a decayed-score attention matrix on the MXU.
+VMEM per step at D=256, L=128: C 256 KB + qkv 3*128*256*4 = ~640 KB.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, i_ref, f_ref, o_ref,
+            c_ref, n_ref, m_ref, *, L: int, d: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (L, d)
+    k = k_ref[0, 0].astype(jnp.float32) / math.sqrt(d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    ig = i_ref[0, 0].astype(jnp.float32)           # (L,) log input gate
+    lf = jax.nn.log_sigmoid(f_ref[0, 0].astype(jnp.float32))
+
+    F = jnp.cumsum(lf)                              # (L,) inclusive
+    # intra log-weights D[t,s] = F_t - F_s + i_s for s <= t
+    Dm = F[:, None] - F[None, :] + ig[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    Dm = jnp.where(tri, Dm, -jnp.inf)
+    m_prev = m_ref[...]
+    m_intra = jnp.max(Dm, axis=1)
+    m_inter = F + m_prev
+    m_t = jnp.maximum(m_intra, m_inter)             # (L,)
+
+    w_intra = jnp.exp(Dm - m_t[:, None])
+    w_inter = jnp.exp(m_inter - m_t)
+
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # (L, L)
+    num = jax.lax.dot(w_intra * scores, v) + \
+        w_inter[:, None] * jax.lax.dot(q, c_ref[...])
+    den = jnp.sum(w_intra * scores, axis=1) + \
+        w_inter * (q @ n_ref[...])
+    h = num / jnp.maximum(jnp.abs(den), 1.0)[:, None]
+    o_ref[0, 0] = h.astype(o_ref.dtype)
+
+    # end-of-chunk state
+    Ftot = F[L - 1]
+    m_end = m_t[L - 1]
+    g_old = jnp.exp(Ftot + m_prev - m_end)
+    w_end = jnp.exp(Ftot - F + ig - m_end)          # (L,)
+    c_ref[...] = g_old * c_ref[...] + \
+        jax.lax.dot_general(k * w_end[:, None], v, (((0,), (0,)), ((), ())))
+    n_ref[...] = g_old * n_ref[...] + jnp.sum(k * w_end[:, None], axis=0)
+    m_ref[...] = m_end
+
+
+def mlstm_chunk(q: jax.Array, k: jax.Array, v: jax.Array, i: jax.Array,
+                f: jax.Array, *, chunk: int = 128,
+                interpret: bool = True) -> jax.Array:
+    """q,k,v: (B, H, S, D); i,f: (B, H, S) pre-activation gates.
+    Returns h: (B, H, S, D).  NOTE: k is scaled by 1/sqrt(D) inside."""
+    b, h, s, d = q.shape
+    L = min(chunk, s)
+    assert s % L == 0
+    nc = s // L
+    kernel = functools.partial(_kernel, L=L, d=d)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, d), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, L, d), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, L, d), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, L), lambda b_, h_, c_: (b_, h_, c_)),
+            pl.BlockSpec((1, 1, L), lambda b_, h_, c_: (b_, h_, c_)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, L, d), lambda b_, h_, c_: (b_, h_, c_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((d, d), jnp.float32),
+            pltpu.VMEM((d,), jnp.float32),
+            pltpu.VMEM((), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, i, f)

@@ -1,0 +1,19 @@
+"""Jit'd wrapper for the chunkwise mLSTM kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mlstm_chunk.kernel import mlstm_chunk
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm(q: jax.Array, k: jax.Array, v: jax.Array, i: jax.Array,
+          f: jax.Array, *, chunk: int = 128,
+          interpret: bool = True) -> jax.Array:
+    """(B, S, H, D) layout wrapper; gates (B, S, H)."""
+    out = mlstm_chunk(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                      v.transpose(0, 2, 1, 3), i.transpose(0, 2, 1),
+                      f.transpose(0, 2, 1), chunk=chunk, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

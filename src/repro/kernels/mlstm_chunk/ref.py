@@ -1,0 +1,42 @@
+"""Fully-recurrent (per-timestep) oracle for the chunkwise mLSTM kernel —
+the stabilized mLSTM cell exactly as in the xLSTM paper."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_recurrent_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        i: jax.Array, f: jax.Array) -> jax.Array:
+    """q,k,v: (B, H, S, D); i,f: (B, H, S). Returns (B, H, S, D)."""
+    b, h, s, d = q.shape
+    f32 = jnp.float32
+    q = q.astype(f32)
+    k = k.astype(f32) / math.sqrt(d)
+    v = v.astype(f32)
+    lf = jax.nn.log_sigmoid(f.astype(f32))
+    ig = i.astype(f32)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, it, lft = xs
+        m_new = jnp.maximum(lft + m, it)
+        fg = jnp.exp(lft + m - m_new)[..., None]
+        iw = jnp.exp(it - m_new)[..., None]
+        C = fg[..., None] * C + iw[..., None] * \
+            jnp.einsum("bhd,bhe->bhde", kt, vt)
+        n = fg * n + iw * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.einsum("bhd,bhd->bh", qt, n)
+        h_out = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        return (C, n, m_new), h_out
+
+    carry0 = (jnp.zeros((b, h, d, d), f32), jnp.zeros((b, h, d), f32),
+              jnp.full((b, h), -1e30, f32))
+    xs = (q.transpose(2, 0, 1, 3), k.transpose(2, 0, 1, 3),
+          v.transpose(2, 0, 1, 3), ig.transpose(2, 0, 1),
+          lf.transpose(2, 0, 1))
+    _, hs = jax.lax.scan(step, carry0, xs)
+    return hs.transpose(1, 2, 0, 3).astype(q.dtype)

@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-importing import: jax locks device count on first init.
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax                       # noqa: E402
+import jax.numpy as jnp          # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (SHAPES, get_config, get_shape, list_archs,  # noqa: E402
+                           shape_applicable)
+from repro.launch.hlo_analysis import (collective_stats, dominant_term,  # noqa: E402
+                                       roofline_terms, total_collective_bytes)
+from repro.launch.hlo_cost import analyze as hlo_analyze  # noqa: E402
+from repro.launch.mesh import dp_size, make_production_mesh  # noqa: E402
+from repro.launch.shardings import (batch_shardings, cache_shardings,  # noqa: E402
+                                    logical_rules, state_shardings,
+                                    tree_shardings)
+from repro.launch.specs import (cache_specs, input_specs, param_specs,  # noqa: E402
+                                state_specs, bytes_of)
+from repro.models import active_param_count, decode_step, prefill  # noqa: E402
+from repro.models.sharding import use_rules  # noqa: E402
+from repro.train.optimizer import AdamWConfig  # noqa: E402
+from repro.train.train import make_train_step  # noqa: E402
+
+
+def _mem_analysis_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {"note": "memory_analysis unavailable"}
+    if ma is None:
+        return {"note": "memory_analysis returned None"}
+    out = {}
+    for attr in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "temp_size_in_bytes"):
+        try:
+            out[attr] = int(getattr(ma, attr))
+        except Exception:
+            pass
+    if not out:
+        out = {"repr": str(ma)}
+    return out
+
+
+def _cost_dict(compiled):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and (
+                "flops" in k or "bytes" in k or "utilization" not in k)}
+
+
+def model_flops(cfg, shape) -> float:
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n * toks
+    return 2.0 * n * shape.global_batch           # decode: one token per seq
+
+
+def _parse_overrides(spec: str) -> dict:
+    out = {}
+    for kv in filter(None, (spec or "").split(",")):
+        k, v = kv.split("=", 1)
+        if v in ("true", "True"):
+            out[k] = True
+        elif v in ("false", "False"):
+            out[k] = False
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               opt: AdamWConfig = AdamWConfig(), overrides: dict = None):
+    """Build + lower + compile one (arch, shape, mesh) cell.
+
+    Returns (lowered, compiled, meta-dict)."""
+    import dataclasses
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = logical_rules(cfg, mesh, shape)
+    n_dev = mesh.devices.size
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "n_devices": int(n_dev), "rules": {k: str(v) for k, v in rules.items()}}
+
+    with mesh, use_rules(mesh, rules):
+        t0 = time.time()
+        if shape.kind == "train":
+            sstruct = state_specs(cfg, opt)
+            ssh = state_shardings(cfg, mesh, sstruct)
+            bsh = batch_shardings(cfg, mesh, shape)
+            ga = max(1, min(cfg.grad_accum,
+                            shape.global_batch // dp_size(mesh)))
+            meta["grad_accum"] = ga
+            step = make_train_step(cfg, opt, grad_accum=ga)
+            jitted = jax.jit(step, in_shardings=(ssh, bsh),
+                             out_shardings=(ssh, NamedSharding(mesh, P())),
+                             donate_argnums=0)
+            lowered = jitted.lower(sstruct, input_specs(cfg, shape))
+        elif shape.kind == "prefill":
+            pstruct = param_specs(cfg)
+            psh = tree_shardings(mesh, pstruct)
+            bsh = batch_shardings(cfg, mesh, shape)
+            csh = cache_shardings(cfg, mesh, shape)
+            dp = rules["dp"]
+
+            def prefill_step(params, batch):
+                logits, cache = prefill(params, cfg, batch,
+                                        cache_len=shape.seq_len)
+                return logits[:, -1], cache
+
+            jitted = jax.jit(
+                prefill_step, in_shardings=(psh, bsh),
+                out_shardings=(NamedSharding(mesh, P(dp, "model")), csh))
+            lowered = jitted.lower(pstruct, input_specs(cfg, shape))
+        else:  # decode
+            pstruct = param_specs(cfg)
+            psh = tree_shardings(mesh, pstruct)
+            bsh = batch_shardings(cfg, mesh, shape)
+            csh = cache_shardings(cfg, mesh, shape)
+            cstruct = cache_specs(cfg, shape)
+            dp = rules["dp"]
+
+            def serve_step(params, cache, token, pos):
+                logits, new_cache = decode_step(params, cfg, cache, token, pos)
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                return nxt[:, None], new_cache
+
+            jitted = jax.jit(
+                serve_step, in_shardings=(psh, csh, bsh["token"], bsh["pos"]),
+                out_shardings=(NamedSharding(mesh, P(dp, None)), csh),
+                donate_argnums=1)
+            lowered = jitted.lower(pstruct, cstruct,
+                                   input_specs(cfg, shape)["token"],
+                                   input_specs(cfg, shape)["pos"])
+        meta["lower_s"] = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        meta["compile_s"] = time.time() - t0
+    return lowered, compiled, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: Path,
+             verbose: bool = True, overrides: dict = None,
+             tag_suffix: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, reason = shape_applicable(cfg, shape)
+    tag = f"{arch}--{shape_name}--{'pod2' if multi_pod else 'pod1'}{tag_suffix}"
+    out_path = outdir / f"{tag}.json"
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "status": "skipped",
+               "reason": reason}
+        out_path.write_text(json.dumps(rec, indent=1))
+        if verbose:
+            print(f"[dryrun] {tag}: SKIP ({reason})")
+        return rec
+
+    try:
+        lowered, compiled, meta = lower_cell(arch, shape_name, multi_pod,
+                                             overrides=overrides)
+        meta["overrides"] = overrides or {}
+    except Exception as e:  # a failure here is a bug in the system
+        rec = {"arch": arch, "shape": shape_name, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-4000:]}
+        out_path.write_text(json.dumps(rec, indent=1))
+        if verbose:
+            print(f"[dryrun] {tag}: ERROR {type(e).__name__}: {e}")
+        return rec
+
+    mem = _mem_analysis_dict(compiled)
+    cost = _cost_dict(compiled)
+    text = compiled.as_text()
+    try:  # persist compressed HLO so costs can be re-analysed w/o recompiling
+        import zstandard
+        (outdir / f"{tag}.hlo.zst").write_bytes(
+            zstandard.ZstdCompressor(level=6).compress(text.encode()))
+    except Exception:
+        pass
+    # primary cost model: trip-count-aware HLO analysis (hlo_cost.py);
+    # XLA's cost_analysis counts while bodies once and is kept for reference.
+    hc = hlo_analyze(text)
+    stats = hc["collectives"]
+    coll_bytes = hc["collective_bytes"]
+    flops_dev = hc["flops"]
+    bytes_dev = hc["hbm_bytes"]
+    terms = roofline_terms(flops_dev, bytes_dev, coll_bytes)
+    mf = model_flops(cfg, shape)
+    n_dev = meta["n_devices"]
+    rec = {
+        **meta, "status": "ok",
+        "cost_analysis_xla": cost,
+        "memory_analysis": mem,
+        "collectives": stats,
+        "collective_bytes_per_device": coll_bytes,
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "model_flops_total": mf,
+        "model_flops_per_device": mf / n_dev,
+        "useful_flops_ratio": (mf / n_dev) / flops_dev if flops_dev else None,
+        "roofline": terms,
+        "dominant": dominant_term(terms),
+        "hlo_bytes": len(text),
+    }
+    out_path.write_text(json.dumps(rec, indent=1))
+    if verbose:
+        print(f"[dryrun] {tag}: OK compute={terms['t_compute']:.4f}s "
+              f"mem={terms['t_memory']:.4f}s coll={terms['t_collective']:.4f}s "
+              f"dominant={rec['dominant']} "
+              f"useful={rec['useful_flops_ratio'] and round(rec['useful_flops_ratio'],3)} "
+              f"(lower {meta['lower_s']:.0f}s compile {meta['compile_s']:.0f}s)")
+        print(f"[dryrun] {tag}: memory_analysis={mem}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--override", default="",
+                    help="cfg overrides, e.g. moe_group=256,grad_accum=8")
+    ap.add_argument("--tag", default="", help="artifact tag suffix")
+    args = ap.parse_args()
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    overrides = _parse_overrides(args.override)
+
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}--{shape}--{'pod2' if mp else 'pod1'}{args.tag}"
+                p = outdir / f"{tag}.json"
+                if args.skip_existing and p.exists():
+                    rec = json.loads(p.read_text())
+                    if rec.get("status") in ("ok", "skipped"):
+                        print(f"[dryrun] {tag}: cached ({rec['status']})")
+                        continue
+                rec = run_cell(arch, shape, mp, outdir, overrides=overrides,
+                               tag_suffix=args.tag)
+                n_err += rec.get("status") == "error"
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Post-compile HLO analysis: collective operand bytes + roofline terms.
+
+``cost_analysis()`` gives FLOPs and bytes but not collective traffic, so we
+parse the compiled (SPMD-partitioned, per-device) HLO text and sum operand
+sizes of every collective op, bucketed by op kind.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _result_bytes(typestr: str) -> int:
+    return sum(_shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(typestr))
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind {count, operand_bytes} from partitioned HLO text."""
+    # symbol table: op name -> result bytes (covers operand lookups)
+    sizes: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        eq = rhs.split("(")[0]  # type portion before the op call
+        sizes[name] = _result_bytes(eq)
+
+    stats = {k: {"count": 0, "operand_bytes": 0.0, "result_bytes": 0.0}
+             for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        _, rhs = m.groups()
+        for kind in COLLECTIVES:
+            # match `kind(` or `kind-start(`; skip -done (double count)
+            if re.search(rf"\b{kind}(-start)?\(", rhs):
+                call = rhs.split(f"{kind}-start(")[-1] if f"{kind}-start(" in rhs \
+                    else rhs.split(f"{kind}(")[-1]
+                inline = _SHAPE_RE.findall(call.split(")")[0])
+                if inline:
+                    ob = sum(_shape_bytes(dt, dims) for dt, dims in inline)
+                else:
+                    ops = _OPND_RE.findall(call.split(")")[0])
+                    ob = sum(sizes.get(o, 0) for o in ops)
+                stats[kind]["count"] += 1
+                stats[kind]["operand_bytes"] += ob
+                stats[kind]["result_bytes"] += _result_bytes(
+                    rhs.split(kind)[0])
+                break
+    return stats
+
+
+def total_collective_bytes(stats: Dict[str, Dict[str, float]]) -> float:
+    return sum(v["operand_bytes"] for v in stats.values())
+
+
+# ------------------------------------------------------------------ roofline
+PEAK_FLOPS = 197e12        # TPU v5e bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   coll_bytes_per_device: float) -> Dict[str, float]:
+    """Three per-step time terms in seconds (per-device program view)."""
+    return {
+        "t_compute": flops_per_device / PEAK_FLOPS,
+        "t_memory": bytes_per_device / HBM_BW,
+        "t_collective": coll_bytes_per_device / LINK_BW,
+    }
+
+
+def dominant_term(terms: Dict[str, float]) -> str:
+    return max(("t_compute", "t_memory", "t_collective"),
+               key=lambda k: terms[k])

@@ -1,0 +1,443 @@
+"""HLO-text cost model with while-loop trip-count multipliers.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, which makes
+scan-over-layers models look ~n_layers cheaper than they are.  This module
+parses the partitioned HLO text into its computation call graph and computes:
+
+  * flops        — 2 * prod(result dims) * prod(contracting dims) per dot,
+                   multiplied through while trip counts (fusion-recursive)
+  * hbm_bytes    — per top-level op: operand + result bytes (fusion = one
+                   kernel: its internal ops don't touch HBM), x trip counts
+  * collectives  — operand bytes per collective kind, x trip counts
+
+Trip counts are read from the loop-condition computation's integer constant
+(scan-generated conds are `lt(i, N)`).  Transcendentals are not counted
+(matmul-dominated workloads; documented in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_ZERO_COST = {"parameter", "get-tuple-element", "tuple", "constant", "bitcast",
+              "after-all", "opt-barrier"}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?))\s+([\w\-]+)\((.*)$")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+
+
+def _shape_elems_bytes(typestr: str) -> Tuple[List[Tuple[str, List[int]]], int]:
+    shapes = []
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(typestr):
+        dd = [int(x) for x in dims.split(",")] if dims else []
+        shapes.append((dt, dd))
+        n = 1
+        for x in dd:
+            n *= x
+        total += n * _DTYPE_BYTES.get(dt, 0)
+    return shapes, total
+
+
+@dataclass
+class Op:
+    name: str
+    typestr: str
+    kind: str
+    args: str          # text inside the call parens (may be truncated at ')')
+    attrs: str         # text after the call parens
+    result_bytes: int = 0
+    result_dims: List[int] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: Dict[str, Op] = field(default_factory=dict)
+    order: List[str] = field(default_factory=list)
+    root: str = ""
+
+    def alias_root(self, nm: str) -> str:
+        """Follow bitcast/copy/reshape/transpose/convert pass-through chains
+        (convert changes dtype, not which window of the buffer is touched)."""
+        seen = set()
+        while nm in self.ops and nm not in seen:
+            seen.add(nm)
+            op = self.ops[nm]
+            if op.kind not in ("bitcast", "copy", "reshape", "transpose",
+                               "convert"):
+                break
+            ins = _NAME_RE.findall(op.args)
+            if len(ins) != 1:
+                break
+            nm = ins[0]
+        return nm
+
+
+def _split_call(rest: str) -> Tuple[str, str]:
+    """rest = everything after 'opkind(' ; split into (args, attrs)."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[:i], rest[i + 1:]
+    return rest, ""
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(m.group(1))
+            continue
+        if line.strip().startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, typestr, kind, rest = m.groups()
+        args, attrs = _split_call(rest)
+        shapes, rbytes = _shape_elems_bytes(typestr)
+        dims = shapes[0][1] if len(shapes) == 1 else []
+        cur.ops[name] = Op(name, typestr, kind, args, attrs, rbytes, dims)
+        cur.order.append(name)
+        if line.lstrip().startswith("ROOT"):
+            cur.root = name
+    return comps
+
+
+def _dims_from_attr(attrs: str, key: str) -> List[int]:
+    m = re.search(rf"{key}=\{{([0-9,]*)\}}", attrs)
+    if not m or not m.group(1):
+        return []
+    return [int(x) for x in m.group(1).split(",")]
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    ops_in = _NAME_RE.findall(op.args)
+    if not ops_in:
+        return 0.0
+    lhs = comp.ops.get(ops_in[0])
+    if lhs is None:
+        return 0.0
+    cdims = _dims_from_attr(op.attrs, "lhs_contracting_dims")
+    csize = 1
+    for d in cdims:
+        if d < len(lhs.result_dims):
+            csize *= lhs.result_dims[d]
+    rsize = 1
+    for d in op.result_dims:
+        rsize *= d
+    return 2.0 * rsize * csize
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for op in cond.ops.values():
+        if op.kind == "constant":
+            m = re.match(r"^\s*([0-9]+)\s*$", op.args)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _callees(op: Op) -> List[Tuple[str, float]]:
+    """(computation_name, multiplier) pairs invoked by this op."""
+    out = []
+    for key in ("calls", "to_apply", "branch_computations"):
+        m = re.search(rf"{key}=\{{?%?([\w.\-]+(?:, ?%?[\w.\-]+)*)\}}?", op.attrs)
+        if m:
+            for nm in re.split(r",\s*", m.group(1)):
+                out.append((nm.lstrip("%"), 1.0))
+    return out
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll: Dict[str, Dict[str, float]] = field(default_factory=lambda: {
+        k: {"count": 0.0, "operand_bytes": 0.0} for k in COLLECTIVES})
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k in COLLECTIVES:
+            self.coll[k]["count"] += other.coll[k]["count"] * mult
+            self.coll[k]["operand_bytes"] += other.coll[k]["operand_bytes"] * mult
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self._memo: Dict[str, Cost] = {}
+        self._touch_memo: Dict[str, List[int]] = {}
+        entry = None
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = _COMP_HDR.match(line)
+                if m:
+                    entry = m.group(1)
+                break
+        if entry is None:  # fall back: computation named main-ish
+            entry = max(self.comps, key=lambda n: len(self.comps[n].ops))
+        self.entry = entry
+
+    def _operand_bytes(self, op: Op, comp: Computation,
+                       skip=frozenset()) -> int:
+        total = 0
+        for nm in _NAME_RE.findall(op.args):
+            if nm in skip:
+                continue
+            o = comp.ops.get(nm)
+            if o is not None:
+                total += o.result_bytes
+        return total
+
+    # ---- slice-aware operand accounting -------------------------------
+    # dynamic-slice/gather touch only their RESULT-sized window of the
+    # operand; dynamic-update-slice touches ~2x the update tensor.  Without
+    # this, a scan slicing a (S, ...) xs tensor is charged the whole tensor
+    # per trip (observed 100x inflation on the sLSTM cells).
+    def _param_touch(self, comp_name: str) -> List[int]:
+        """Per-parameter touched bytes inside a fusion computation, or -1
+        for 'full operand'."""
+        if comp_name in self._touch_memo:
+            return self._touch_memo[comp_name]
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return []
+        params: Dict[str, int] = {}   # param op name -> index
+        for opname in comp.order:
+            op = comp.ops[opname]
+            if op.kind == "parameter":
+                m = re.match(r"^\s*([0-9]+)", op.args)
+                if m:
+                    params[opname] = int(m.group(1))
+        n = (max(params.values()) + 1) if params else 0
+        touched = [0] * n
+        full = [False] * n
+        passthrough = ("bitcast", "copy", "reshape", "transpose")
+        for opname in comp.order:
+            op = comp.ops[opname]
+            if op.kind == "parameter" or op.kind in passthrough:
+                continue          # aliases analysed at their consumers
+            raw = _NAME_RE.findall(op.args)
+            roots = [comp.alias_root(nm) for nm in raw]
+            for pos, r_nm in enumerate(roots):
+                if r_nm not in params:
+                    continue
+                i = params[r_nm]
+                if op.kind in ("dynamic-slice", "gather"):
+                    touched[i] += op.result_bytes if pos == 0 else 0
+                elif op.kind == "dynamic-update-slice":
+                    if pos == 0 and len(raw) > 1:
+                        upd = comp.ops.get(raw[1])
+                        touched[i] += upd.result_bytes if upd else 0
+                    else:          # the param IS the update (or index)
+                        touched[i] += comp.ops[r_nm].result_bytes
+                else:
+                    full[i] = True
+        out = [-1 if full[i] else touched[i] for i in range(n)]
+        self._touch_memo[comp_name] = out
+        return out
+
+    def _dus_root_update_bytes(self, callee: str) -> int:
+        """If the callee's ROOT is (an alias of) a dynamic-update-slice,
+        the fusion writes only the update window, not the whole buffer.
+        Returns the update size, or -1 if not a DUS-rooted fusion."""
+        comp = self.comps.get(callee)
+        if comp is None or not comp.root:
+            return -1
+        root = comp.alias_root(comp.root)
+        op = comp.ops.get(root)
+        if op is None or op.kind != "dynamic-update-slice":
+            return -1
+        ins = _NAME_RE.findall(op.args)
+        if len(ins) > 1:
+            upd = comp.ops.get(comp.alias_root(ins[1])) or comp.ops.get(ins[1])
+            if upd is not None and upd.result_bytes:
+                return upd.result_bytes
+            # update produced inline (e.g. iota/compute); fall back to the
+            # DUS result's smallest operand estimate: use op result / 64
+            return max(1, op.result_bytes // 64)
+        return -1
+
+    def _call_boundary_bytes(self, op: Op, comp: Computation, callee: str,
+                             skip=frozenset()) -> int:
+        """Fusion/call boundary traffic with slice-aware parameter reads."""
+        names = _NAME_RE.findall(op.args)
+        touch = self._param_touch(callee)
+        if op.name in skip:
+            total = 0
+        else:
+            dus_upd = self._dus_root_update_bytes(callee)
+            total = dus_upd if dus_upd >= 0 else op.result_bytes
+        for i, nm in enumerate(names):
+            if nm in skip:
+                continue
+            o = comp.ops.get(nm)
+            if o is None:
+                continue
+            if i < len(touch) and touch[i] >= 0:
+                total += min(touch[i], o.result_bytes)
+            else:
+                total += o.result_bytes
+        return total
+
+    # TPU producer-consumer fusion approximation: a fusible op whose result
+    # has exactly ONE use, by another fusible op, stays on-chip — neither
+    # its write nor the consumer's read hits HBM.  Without this, every CPU
+    # fusion boundary (e.g. the f32 norm chains) is charged, inflating the
+    # memory term ~2-3x vs what the TPU backend would emit.
+    _FUSIBLE = {"fusion", "convert", "broadcast", "transpose", "reshape",
+                "copy", "add", "multiply", "subtract", "divide", "tanh",
+                "exponential", "negate", "maximum", "minimum", "compare",
+                "select", "iota", "slice", "concatenate", "pad", "reduce"}
+
+    def _use_counts(self, comp: Computation) -> Dict[str, int]:
+        uses: Dict[str, int] = {}
+        for opname in comp.order:
+            op = comp.ops[opname]
+            for nm in _NAME_RE.findall(op.args):
+                if nm in comp.ops:
+                    uses[nm] = uses.get(nm, 0) + 1
+            # operands referenced in attrs (while init etc.) count too
+            for nm in _NAME_RE.findall(op.attrs):
+                if nm in comp.ops:
+                    uses[nm] = uses.get(nm, 0) + 1
+        return uses
+
+    def _chain_maps(self, comp: Computation):
+        """(skip_write, skip_read_edges): single-use fusible->fusible edges."""
+        uses = self._use_counts(comp)
+        consumers: Dict[str, List[str]] = {}
+        for opname in comp.order:
+            op = comp.ops[opname]
+            for nm in _NAME_RE.findall(op.args):
+                if nm in comp.ops:
+                    consumers.setdefault(nm, []).append(opname)
+        skip = set()
+        for opname in comp.order:
+            op = comp.ops[opname]
+            if op.kind not in self._FUSIBLE:
+                continue
+            if uses.get(opname, 0) != 1:
+                continue
+            cons = consumers.get(opname, [])
+            if len(cons) == 1 and comp.ops[cons[0]].kind in self._FUSIBLE:
+                skip.add(opname)        # stays on-chip
+        return skip
+
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()  # break cycles defensively
+        comp = self.comps.get(name)
+        if comp is None:
+            return self._memo[name]
+        fused_away = self._chain_maps(comp)
+        cost = Cost()
+        for opname in comp.order:
+            op = comp.ops[opname]
+            kind = op.kind
+            if kind in _ZERO_COST:
+                continue
+            if kind == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                mc = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                body = mb.group(1) if mb else None
+                cond = mc.group(1) if mc else None
+                trips = _trip_count(self.comps[cond]) if cond in self.comps else 1
+                if body in self.comps:
+                    cost.add(self.comp_cost(body), trips)
+                if cond in self.comps:
+                    cost.add(self.comp_cost(cond), trips)
+                continue
+            if kind == "dot":
+                cost.flops += _dot_flops(op, comp)
+                cost.hbm_bytes += self._operand_bytes(op, comp, fused_away) \
+                    + op.result_bytes
+                continue
+            if kind in COLLECTIVES or (kind.endswith("-start") and
+                                       kind[:-6] in COLLECTIVES):
+                base = kind[:-6] if kind.endswith("-start") else kind
+                cost.coll[base]["count"] += 1
+                cost.coll[base]["operand_bytes"] += self._operand_bytes(op, comp)
+                cost.hbm_bytes += self._operand_bytes(op, comp) + op.result_bytes
+                continue
+            if kind.endswith("-done"):
+                continue
+            if kind in ("dynamic-slice", "gather"):
+                ops_in = _NAME_RE.findall(op.args)
+                idx_bytes = sum(comp.ops[nm].result_bytes
+                                for nm in ops_in[1:] if nm in comp.ops)
+                cost.hbm_bytes += 2 * op.result_bytes + idx_bytes
+                continue
+            if kind == "dynamic-update-slice":
+                ops_in = _NAME_RE.findall(op.args)
+                upd = comp.ops.get(ops_in[1]) if len(ops_in) > 1 else None
+                ub = upd.result_bytes if upd else op.result_bytes
+                cost.hbm_bytes += 2 * ub    # read update + write window
+                continue
+            callees = _callees(op)
+            if kind in ("fusion", "call", "conditional", "async-start"):
+                for cn, mult in callees:
+                    sub = self.comp_cost(cn)
+                    cost.flops += sub.flops * mult
+                    for k in COLLECTIVES:
+                        cost.coll[k]["count"] += sub.coll[k]["count"] * mult
+                        cost.coll[k]["operand_bytes"] += \
+                            sub.coll[k]["operand_bytes"] * mult
+                # fusion = one kernel: slice-aware boundary traffic only
+                if kind == "fusion" and callees:
+                    cost.hbm_bytes += self._call_boundary_bytes(
+                        op, comp, callees[0][0], fused_away)
+                else:
+                    cost.hbm_bytes += self._operand_bytes(op, comp, fused_away) \
+                        + op.result_bytes
+                continue
+            if kind in ("map", "scatter", "select-and-scatter", "sort"):
+                # tiny scalar to_apply bodies: boundary bytes only
+                cost.hbm_bytes += self._operand_bytes(op, comp, fused_away) \
+                    + op.result_bytes
+                continue
+            # plain top-level op (copy, broadcast, transpose, reduce, ...)
+            cost.hbm_bytes += self._operand_bytes(op, comp, fused_away) + \
+                (0 if opname in fused_away else op.result_bytes)
+        self._memo[name] = cost
+        return cost
+
+    def entry_cost(self) -> Cost:
+        return self.comp_cost(self.entry)
+
+
+def analyze(text: str) -> Dict:
+    cost = HloCostModel(text).entry_cost()
+    return {
+        "flops": cost.flops,
+        "hbm_bytes": cost.hbm_bytes,
+        "collectives": cost.coll,
+        "collective_bytes": sum(v["operand_bytes"] for v in cost.coll.values()),
+    }

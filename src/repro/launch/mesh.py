@@ -1,0 +1,34 @@
+"""Production mesh builders (functions, not constants: importing this module
+never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_mesh(dp: int, tp: int, pods: int = 1):
+    """Elastic-runtime mesh: DP degree is a runtime parameter."""
+    if pods > 1:
+        return _mk((pods, dp, tp), ("pod", "data", "model"))
+    return _mk((dp, tp), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh) -> int:
+    out = 1
+    for a in dp_axes(mesh):
+        out *= mesh.shape[a]
+    return out

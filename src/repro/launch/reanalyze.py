@@ -1,0 +1,62 @@
+"""Recompute cost fields in dry-run artifacts from their saved HLO (no
+recompilation) — used when the hlo_cost model improves.
+
+    PYTHONPATH=src python -m repro.launch.reanalyze [--dir artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import zstandard
+
+from repro.launch.hlo_analysis import dominant_term, roofline_terms
+from repro.launch.hlo_cost import analyze
+
+
+def reanalyze_file(json_path: Path) -> bool:
+    hlo_path = json_path.with_suffix("").with_suffix(".hlo.zst") \
+        if json_path.name.endswith(".json") else None
+    hlo_path = json_path.parent / (json_path.stem + ".hlo.zst")
+    if not hlo_path.exists():
+        return False
+    rec = json.loads(json_path.read_text())
+    if rec.get("status") != "ok":
+        return False
+    text = zstandard.ZstdDecompressor().decompress(
+        hlo_path.read_bytes()).decode()
+    hc = analyze(text)
+    rec["collectives"] = hc["collectives"]
+    rec["collective_bytes_per_device"] = hc["collective_bytes"]
+    rec["flops_per_device"] = hc["flops"]
+    rec["bytes_per_device"] = hc["hbm_bytes"]
+    terms = roofline_terms(hc["flops"], hc["hbm_bytes"],
+                           hc["collective_bytes"])
+    rec["roofline"] = terms
+    rec["dominant"] = dominant_term(terms)
+    mfd = rec.get("model_flops_per_device")
+    rec["useful_flops_ratio"] = (mfd / hc["flops"]) if (mfd and hc["flops"]) \
+        else None
+    json_path.write_text(json.dumps(rec, indent=1))
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+    n = 0
+    for p in sorted(Path(args.dir).glob("*.json")):
+        if reanalyze_file(p):
+            n += 1
+            rec = json.loads(p.read_text())
+            t = rec["roofline"]
+            print(f"[reanalyze] {p.stem}: compute={t['t_compute']:.4f} "
+                  f"mem={t['t_memory']:.4f} coll={t['t_collective']:.4f} "
+                  f"dominant={rec['dominant']}")
+    print(f"[reanalyze] updated {n} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Serving launcher: batched request waves against a (reduced) model.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--waves", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=96)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, smoke_config
+    from repro.models import init_model
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_len=args.max_len)
+    rng = np.random.RandomState(0)
+    for w in range(args.waves):
+        reqs = [Request(prompt=rng.randint(2, cfg.raw_vocab_size,
+                                           rng.randint(4, 24)),
+                        max_new_tokens=8) for _ in range(args.batch)]
+        stats = eng.serve_wave(reqs)
+        print(f"[serve] wave {w}: {stats.tokens_out} tokens, "
+              f"prefill {stats.prefill_s*1e3:.0f}ms, "
+              f"decode {stats.decode_tok_s:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,214 @@
+"""Sharding rules: param-path -> PartitionSpec, plus logical activation rules.
+
+Scheme (DESIGN.md §4): DP over ('pod','data'); FSDP over 'data'; TP/EP over
+'model'.  Divisibility is checked per-dim — an axis that does not divide the
+dim is dropped (e.g. head-replicated attention for arctic/gemma2/qwen2.5).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import dp_axes, dp_size
+from repro.models import init_cache
+from repro.models.attention import padded_heads
+
+Axis = Optional[object]
+
+
+def _fits(mesh: Mesh, axis, dim: int) -> bool:
+    if axis is None:
+        return True
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return dim % n == 0 and dim >= n
+
+
+def _guard(mesh: Mesh, spec: Tuple[Axis, ...], shape) -> P:
+    return P(*[a if _fits(mesh, a, d) else None for a, d in zip(spec, shape)])
+
+
+# ------------------------------------------------------------- param rules
+# (parent, name) -> base spec for the *unstacked* array; stacked group params
+# get leading None dims prepended automatically.
+_IN = ("data", "model")     # (d_in, parallel_out)
+_OUT = ("model", "data")    # (parallel_in, d_out)
+_RULES: Dict[Tuple[str, str], Tuple[Axis, ...]] = {
+    ("", "embed"): ("model", "data"),      # vocab x d, FSDP'd on d
+    ("", "unembed"): ("model", "data"),
+    ("attn", "wq"): _IN, ("attn", "wk"): _IN, ("attn", "wv"): _IN,
+    ("attn", "wo"): _OUT,
+    ("attn", "bq"): (None,), ("attn", "bk"): (None,), ("attn", "bv"): (None,),
+    ("attn", "q_norm"): (None,), ("attn", "k_norm"): (None,),
+    ("cross", "wq"): _IN, ("cross", "wk"): _IN, ("cross", "wv"): _IN,
+    ("cross", "wo"): _OUT,
+    ("cross", "q_norm"): (None,), ("cross", "k_norm"): (None,),
+    ("ffn", "w_gate"): _IN, ("ffn", "w_up"): _IN, ("ffn", "w_down"): _OUT,
+    ("moe", "router"): ("data", None),
+    ("moe", "w_gate"): ("model", "data", None),
+    ("moe", "w_up"): ("model", "data", None),
+    ("moe", "w_down"): ("model", None, "data"),
+    ("mamba", "in_proj"): _IN, ("mamba", "out_proj"): _OUT,
+    ("mamba", "conv_w"): (None, "model"), ("mamba", "conv_b"): ("model",),
+    ("mamba", "x_proj"): ("model", None), ("mamba", "dt_proj"): (None, "model"),
+    ("mamba", "dt_bias"): ("model",), ("mamba", "A_log"): ("model", None),
+    ("mamba", "D"): ("model",),
+    ("mixer", "wq"): _IN, ("mixer", "wk"): _IN, ("mixer", "wv"): _IN,
+    ("mixer", "w_gate"): _IN, ("mixer", "w_out"): _OUT,
+    ("mixer", "w_i"): ("data", None), ("mixer", "w_f"): ("data", None),
+    ("mixer", "b_i"): (None,), ("mixer", "b_f"): (None,),
+    ("mixer", "w"): ("data", None), ("mixer", "r"): (None, None, None, None),
+    ("mixer", "b"): (None,),
+}
+
+
+def _path_str(path) -> Tuple[str, str]:
+    keys = []
+    for k in path:
+        if hasattr(k, "key"):
+            keys.append(str(k.key))
+        elif hasattr(k, "idx"):
+            keys.append(str(k.idx))
+        else:
+            keys.append(str(k))
+    name = keys[-1]
+    parent = ""
+    for cand in reversed(keys[:-1]):
+        if cand in ("attn", "cross", "ffn", "moe", "mamba", "mixer"):
+            parent = cand
+            break
+    return parent, name
+
+
+def param_spec(mesh: Mesh, path, leaf) -> P:
+    parent, name = _path_str(path)
+    base = _RULES.get((parent, name))
+    if base is None:
+        if name in ("ln1", "ln2", "ln_cross", "final_norm", "q_norm", "k_norm"):
+            base = (None,) * leaf.ndim
+            return P(*base)
+        base = (None,) * leaf.ndim            # default: replicate
+    pad = leaf.ndim - len(base)
+    assert pad >= 0, (parent, name, leaf.ndim, base)
+    spec = (None,) * pad + tuple(base)
+    return _guard(mesh, spec, leaf.shape)
+
+
+def tree_shardings(mesh: Mesh, tree):
+    """NamedSharding tree for params / opt-state-like trees."""
+    def one(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        # opt-state mu/nu paths look like mu/<param path>: strip the prefix
+        return NamedSharding(mesh, param_spec(mesh, path, leaf))
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+# ---------------------------------------------------------- logical rules
+def logical_rules(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig) -> Dict:
+    tp = mesh.shape["model"]
+    b = shape.global_batch
+    dpx = dp_axes(mesh)
+    dp: Axis = dpx if (b % dp_size(mesh) == 0) else (
+        ("data",) if b % mesh.shape["data"] == 0 else None)
+    kv_ok = cfg.n_kv_heads % tp == 0
+    heads_ok = padded_heads(cfg) % tp == 0
+    if b == 1:
+        cache_seq: Axis = ("data", "model") if not kv_ok else ("data",)
+    else:
+        cache_seq = "model" if not kv_ok else None
+    sp = "model" if (cfg.seq_parallel_residual and shape.kind == "train"
+                     and shape.seq_len % tp == 0) else None
+    return {
+        "dp": dp,
+        "tp_heads": "model" if heads_ok else None,
+        "tp_kv": "model" if kv_ok else None,
+        # sequence-parallel attention when heads aren't TP-shardable
+        "kv_seq": None if heads_ok else "model",
+        "tp_ff": "model",
+        "ep": "model" if (cfg.n_experts and cfg.n_experts % tp == 0) else None,
+        "cache_seq": cache_seq,
+        "sp": sp,
+        "vocab": "model",
+    }
+
+
+# ---------------------------------------------------------- batch / cache
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig):
+    rules = logical_rules(cfg, mesh, shape)
+    dp = rules["dp"]
+
+    def ns(*axes):
+        return NamedSharding(mesh, P(*axes))
+
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": ns(dp, None)}
+        if shape.kind == "train":
+            out["targets"] = ns(dp, None)
+        if cfg.family == "audio":
+            out["frames"] = ns(dp, None, None)
+        if cfg.family == "vlm":
+            out["patches"] = ns(dp, None, None)
+        return out
+    return {"token": ns(dp, None), "pos": ns()}
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig):
+    """Structure mirrors models.transformer.init_cache."""
+    rules = logical_rules(cfg, mesh, shape)
+    dp, cseq, kv = rules["dp"], rules["cache_seq"], rules["tp_kv"]
+    tpff = rules["tp_ff"]
+
+    def ns(*axes):
+        return NamedSharding(mesh, P(*axes))
+
+    def entry(kind: str, stacked: bool):
+        pre = (None,) if stacked else ()
+
+        def mk(*axes):
+            return NamedSharding(mesh, P(*(pre + axes)))
+
+        if kind in ("attn", "attn_local"):
+            e = {"k": mk(dp, cseq, kv, None), "v": mk(dp, cseq, kv, None)}
+            if cfg.family == "audio":
+                e["ck"] = mk(dp, None, kv, None)
+                e["cv"] = mk(dp, None, kv, None)
+            return e
+        if kind == "mamba":
+            return {"h": mk(dp, tpff, None), "conv": mk(dp, None, tpff)}
+        if kind == "mlstm":
+            return {"C": mk(dp, None, None, tpff), "n": mk(dp, None, None),
+                    "m": mk(dp, None)}
+        if kind == "slstm":
+            return {k: mk(dp, None, None) for k in ("h", "c", "n", "m")}
+        raise ValueError(kind)
+
+    period = cfg.layer_period
+    groups = {f"p{j}": entry(cfg.layer_kind(j), True) for j in range(period)}
+    base = cfg.n_groups * period
+    tail = [entry(cfg.layer_kind(base + t), False)
+            for t in range(cfg.tail_layers)]
+    return {"groups": groups, "tail": tail}
+
+
+def state_shardings(cfg: ModelConfig, mesh: Mesh, state_struct):
+    """Shardings for {"params": ..., "opt": {mu, nu, step}}."""
+    params_sh = tree_shardings(mesh, state_struct["params"])
+    return {
+        "params": params_sh,
+        "opt": {
+            "mu": tree_shardings(mesh, state_struct["opt"]["mu"]),
+            "nu": tree_shardings(mesh, state_struct["opt"]["nu"]),
+            "step": NamedSharding(mesh, P()),
+        },
+    }
+
+
+def scalar_shardings(mesh: Mesh, tree):
+    return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,67 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the batch pytree for the step function
+selected by ``shape.kind``; decode shapes additionally need the cache struct
+(``cache_specs``) and train shapes the state struct (``state_specs``).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import init_cache, init_model
+from repro.train.optimizer import AdamWConfig, init_opt_state
+
+I32 = jnp.int32
+BF16 = jnp.bfloat16
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def text_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    if cfg.family == "vlm" and shape.kind in ("train", "prefill"):
+        return shape.seq_len - cfg.n_patches
+    return shape.seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """Batch ShapeDtypeStructs for the lowered step function."""
+    b = shape.global_batch
+    if shape.kind in ("train", "prefill"):
+        s = text_len(cfg, shape)
+        batch = {"tokens": sds((b, s), I32)}
+        if shape.kind == "train":
+            batch["targets"] = sds((b, s), I32)
+        if cfg.family == "audio":
+            batch["frames"] = sds((b, cfg.enc_frames, cfg.d_model), BF16)
+        if cfg.family == "vlm":
+            batch["patches"] = sds((b, cfg.n_patches, cfg.d_model), BF16)
+        return batch
+    # decode: one new token against a seq_len cache
+    return {"token": sds((b, 1), I32), "pos": sds((), I32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    b = shape.global_batch
+    return jax.eval_shape(lambda: init_cache(cfg, b, shape.seq_len, BF16))
+
+
+def state_specs(cfg: ModelConfig, opt: AdamWConfig) -> Dict:
+    def build(key):
+        params = init_model(key, cfg)
+        return {"params": params, "opt": init_opt_state(params, cfg.opt_dtype)}
+    return jax.eval_shape(build, jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def param_specs(cfg: ModelConfig) -> Dict:
+    return jax.eval_shape(lambda k: init_model(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def bytes_of(tree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,106 @@
+"""Production training launcher.
+
+On a real TPU pod this process runs per-host under `jax.distributed`; here it
+drives the same code path on however many (fake or real) devices exist.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        --smoke --steps 20 --dp 1 --tp 1
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--pods", type=int, default=1)
+    ap.add_argument("--seq", type=int, default=0, help="override seq len")
+    ap.add_argument("--batch", type=int, default=0, help="override batch")
+    ap.add_argument("--ckpt", default="/tmp/repro_launch_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--elastic-target", type=float, default=0.0,
+                    help=">0: run under the Enel elastic controller")
+    args = ap.parse_args()
+
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config, get_shape, smoke_config
+    from repro.data.pipeline import DataConfig, global_batch
+    from repro.launch.mesh import dp_size as mesh_dp_size, make_mesh
+    from repro.launch.shardings import (batch_shardings, logical_rules,
+                                        state_shardings)
+    from repro.models.sharding import use_rules
+    from repro.train.checkpoint import (latest_step, restore_checkpoint,
+                                        save_checkpoint)
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.train import init_train_state, make_train_step
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    shape = get_shape(args.shape)
+    if args.seq or args.batch:
+        shape = dataclasses.replace(
+            shape, seq_len=args.seq or shape.seq_len,
+            global_batch=args.batch or shape.global_batch)
+
+    if args.elastic_target > 0:
+        from repro.train.elastic import ElasticConfig, ElasticTrainer
+        ecfg = ElasticConfig(target_runtime=args.elastic_target,
+                             n_components=max(1, args.steps // 4),
+                             steps_per_component=4,
+                             dp_choices=tuple(sorted({1, 2, args.dp})),
+                             ckpt_dir=args.ckpt)
+        res = ElasticTrainer(cfg, shape, ecfg).run()
+        print(f"[elastic] {res}")
+        return
+
+    mesh = make_mesh(args.dp, args.tp, args.pods)
+    rules = logical_rules(cfg, mesh, shape)
+    opt = AdamWConfig(total_steps=args.steps)
+    with mesh, use_rules(mesh, rules):
+        state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+        ssh = state_shardings(cfg, mesh, state)
+        state = jax.device_put(state, ssh)
+        start = 0
+        if args.resume and latest_step(args.ckpt) is not None:
+            host = jax.tree_util.tree_map(np.asarray, state)
+            state, start, _ = restore_checkpoint(args.ckpt, host,
+                                                 shardings=ssh)
+            print(f"[train] resumed at step {start}")
+        step_fn = jax.jit(make_train_step(cfg, opt),
+                          in_shardings=(ssh, None), out_shardings=None,
+                          donate_argnums=0)
+        dcfg = DataConfig()
+        t0 = time.time()
+        for i in range(start, args.steps):
+            nb = global_batch(dcfg, cfg, shape, i,
+                              dp_size=max(1, shape.global_batch //
+                                          max(args.batch or 4, 1)),
+                              seq_len=min(shape.seq_len, 256))
+            batch = {k: jnp.asarray(v) for k, v in nb.items()}
+            state, metrics = step_fn(state, batch)
+            if i % 5 == 0 or i == args.steps - 1:
+                print(f"[train] step {i} loss={float(metrics['loss']):.4f}")
+            if (i + 1) % args.ckpt_every == 0:
+                host = jax.tree_util.tree_map(np.asarray, state)
+                save_checkpoint(args.ckpt, i + 1, host)
+        print(f"[train] {args.steps - start} steps in {time.time()-t0:.1f}s "
+              f"on mesh {dict(mesh.shape)}")
+
+
+if __name__ == "__main__":
+    main()

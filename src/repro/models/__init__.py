@@ -1,0 +1,6 @@
+from repro.models.model import (active_param_count, apply_model, decode_step,
+                                init_cache, init_model, pad_cache_to,
+                                param_count, prefill)
+
+__all__ = ["active_param_count", "apply_model", "decode_step", "init_cache",
+           "init_model", "pad_cache_to", "param_count", "prefill"]

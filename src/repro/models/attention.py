@@ -1,0 +1,230 @@
+"""GQA attention covering every assigned flavour:
+
+* grouped-query attention with broadcast-fused KV-head repeat,
+* sliding-window (local) and alternating local/global layers (gemma2/3),
+* attention-logit softcap (gemma2), qk-norm (olmoe/qwen3/gemma3),
+* QKV bias (qwen2.5), cross-attention (whisper), rope / sinusoidal / none,
+* head padding for clean 16-way TP when n_heads % 16 != 0 (perf knob),
+* query-chunked exact attention for long sequences (mirrors the Pallas
+  flash kernel's tiling so the lowered jnp path has realistic live buffers),
+* decode against a (B, S, Kh, Dh) KV cache written at a traced position.
+
+The Pallas kernels in ``repro.kernels`` implement the same contracts for TPU;
+``ref.py`` oracles there are thin wrappers over these functions.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init, head_rms_norm, softcap
+from repro.models.sharding import constrain
+
+NEG_INF = -2.0e38
+
+
+def padded_heads(cfg: ModelConfig) -> int:
+    return max(cfg.head_pad_to, cfg.n_heads)
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.param_dtype]
+    hp = padded_heads(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, hp * cfg.d_head, dt),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.kv_hidden, dt),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.kv_hidden, dt),
+        "wo": dense_init(ks[3], hp * cfg.d_head, cfg.d_model, dt,
+                         scale=1.0 / math.sqrt(cfg.q_hidden)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hp * cfg.d_head,), dt)
+        p["bk"] = jnp.zeros((cfg.kv_hidden,), dt)
+        p["bv"] = jnp.zeros((cfg.kv_hidden,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((cfg.d_head,), jnp.float32)
+        p["k_norm"] = jnp.zeros((cfg.d_head,), jnp.float32)
+    return p
+
+
+def _layer_theta(cfg: ModelConfig, kind: str) -> float:
+    """gemma3 local layers keep the short-context 10k base frequency."""
+    if kind == "attn_local" and cfg.rope_theta > 10_000.0:
+        return 10_000.0
+    return cfg.rope_theta
+
+
+def _project_q(p, cfg: ModelConfig, x, positions, kind):
+    hp = padded_heads(cfg)
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+    q = q.reshape(*x.shape[:-1], hp, cfg.d_head)
+    if cfg.qk_norm:
+        q = head_rms_norm(q, p["q_norm"], cfg.norm_eps)
+    if cfg.rope_theta:
+        q = apply_rope(q, positions, _layer_theta(cfg, kind),
+                       upcast=cfg.rope_upcast)
+    return constrain(q, "dp", None, "tp_heads", None)
+
+
+def _project_kv(p, cfg: ModelConfig, x, positions, kind):
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    k = k.reshape(*x.shape[:-1], cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(*x.shape[:-1], cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        k = head_rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope_theta:
+        k = apply_rope(k, positions, _layer_theta(cfg, kind),
+                       upcast=cfg.rope_upcast)
+    return k, v
+
+
+def _expand_kv(x: jax.Array, hp: int) -> jax.Array:
+    """(B,T,Kh,Dh) -> (B,T,Hp,Dh) via broadcast+reshape (fuses into the dot)."""
+    b, t, kh, dh = x.shape
+    g = hp // kh
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, t, kh, g, dh))
+    return x.reshape(b, t, kh * g, dh)
+
+
+def _mask_bias(kind: str, cfg: ModelConfig, q_pos: jax.Array, k_pos: jax.Array,
+               causal: bool) -> jax.Array:
+    """Additive mask (B, Sq, Sk) from (B, Sq)/(B, Sk) position vectors."""
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    allow = jnp.ones_like(d, dtype=bool)
+    if causal:
+        allow &= d >= 0
+    if kind == "attn_local" and cfg.sliding_window:
+        allow &= d < cfg.sliding_window
+    return jnp.where(allow, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa(cfg: ModelConfig, q, k, v, bias) -> jax.Array:
+    """Exact attention on one query chunk. q:(B,Sq,H,Dh) k,v:(B,T,H,Dh)."""
+    scale = 1.0 / math.sqrt(cfg.d_head)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if cfg.attn_logit_softcap:
+        s = softcap(s, cfg.attn_logit_softcap)
+    s = s + bias[:, None] if bias.ndim == 3 else s + bias
+    a = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", a, v)
+
+
+_Q_CHUNK = 1024
+
+
+def multi_head_attention(p, cfg: ModelConfig, x, positions, kind: str,
+                         *, causal: bool = True,
+                         kv_x: Optional[jax.Array] = None,
+                         kv_positions: Optional[jax.Array] = None,
+                         return_kv: bool = False):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    With ``return_kv`` also returns the pre-expansion roped (k, v) —
+    (B, T, Kh, Dh) — for prefill cache construction.
+    """
+    hp = padded_heads(cfg)
+    q = _project_q(p, cfg, x, positions, kind)
+    src = x if kv_x is None else kv_x
+    src_pos = positions if kv_positions is None else kv_positions
+    # kv_seq shards the key/value sequence over 'model' when heads are not
+    # TP-shardable (arctic 56H, gemma2 8H, qwen2.5 40H): sequence-parallel
+    # attention instead of head-replicated attention (DESIGN.md §4).
+    k_raw, v_raw = _project_kv(p, cfg, src, src_pos, kind)
+    k_raw = constrain(k_raw, "dp", "kv_seq", "tp_kv", None)
+    v_raw = constrain(v_raw, "dp", "kv_seq", "tp_kv", None)
+    k, v = _expand_kv(k_raw, hp), _expand_kv(v_raw, hp)
+
+    sq = q.shape[1]
+    if sq > _Q_CHUNK and sq % _Q_CHUNK == 0:
+        nq = sq // _Q_CHUNK
+        qc = q.reshape(q.shape[0], nq, _Q_CHUNK, hp, cfg.d_head)
+        qpos = positions.reshape(positions.shape[0], nq, _Q_CHUNK)
+
+        def chunk(_, inp):
+            qi, pi = inp
+            bias = _mask_bias(kind, cfg, pi, src_pos, causal)  # (B,Cq,T)
+            bias = constrain(bias, "dp", None, "kv_seq")
+            return None, _sdpa(cfg, qi, k, v, bias)
+
+        _, out = jax.lax.scan(chunk, None,
+                              (qc.transpose(1, 0, 2, 3, 4),
+                               qpos.transpose(1, 0, 2)))
+        out = out.transpose(1, 0, 2, 3, 4).reshape(q.shape[0], sq, hp, cfg.d_head)
+    else:
+        bias = _mask_bias(kind, cfg, positions, src_pos, causal)
+        bias = constrain(bias, "dp", None, "kv_seq")
+        out = _sdpa(cfg, q, k, v, bias)
+
+    out = _finish(p, cfg, out)
+    if return_kv:
+        return out, (k_raw, v_raw)
+    return out
+
+
+def _finish(p, cfg: ModelConfig, out: jax.Array) -> jax.Array:
+    hp = padded_heads(cfg)
+    if hp > cfg.n_heads:                        # inert padded heads (DESIGN.md §4)
+        head_mask = (jnp.arange(hp) < cfg.n_heads).astype(out.dtype)
+        out = out * head_mask[None, None, :, None]
+    out = constrain(out, "dp", None, "tp_heads", None)
+    out = out.reshape(*out.shape[:-2], hp * cfg.d_head)
+    return out @ p["wo"]
+
+
+# ------------------------------------------------------------------- decode path
+def init_kv_cache(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    shape = (batch, seq, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(p, cfg: ModelConfig, x, cache, pos, kind: str,
+                     *, cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None):
+    """One-token attention. x:(B,1,d); pos: scalar int32 (shared across batch).
+
+    Self-attention writes (k,v) for the new token into the cache at ``pos`` and
+    attends over positions <= pos (window-clipped for local layers).  With
+    ``cross_kv`` the cache is ignored and full encoder K/V are attended.
+    Returns (out, new_cache).
+    """
+    hp = padded_heads(cfg)
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q = _project_q(p, cfg, x, positions, kind)
+
+    if cross_kv is not None:
+        ck, cv = cross_kv
+        k, v = _expand_kv(ck, hp), _expand_kv(cv, hp)
+        t = k.shape[1]
+        bias = jnp.zeros((1, t), jnp.float32)
+        out = _sdpa(cfg, q, k, v, bias)
+        return _finish(p, cfg, out), cache
+
+    k_new, v_new = _project_kv(p, cfg, x, positions, kind)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                      (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                      (0, pos, 0, 0))
+    ck = constrain(ck, "dp", "cache_seq", "tp_kv", None)
+    cv = constrain(cv, "dp", "cache_seq", "tp_kv", None)
+
+    t = ck.shape[1]
+    kpos = jnp.arange(t, dtype=jnp.int32)
+    allow = kpos <= pos
+    if kind == "attn_local" and cfg.sliding_window:
+        allow &= kpos > pos - cfg.sliding_window
+    bias = jnp.where(allow, 0.0, NEG_INF).astype(jnp.float32)[None, :]  # (1,T)
+
+    k, v = _expand_kv(ck, hp), _expand_kv(cv, hp)
+    out = _sdpa(cfg, q, k.astype(q.dtype), v.astype(q.dtype), bias)
+    return _finish(p, cfg, out), {"k": ck, "v": cv}

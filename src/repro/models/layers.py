@@ -1,0 +1,123 @@
+"""Primitive layers: inits, norms, FFNs, embeddings, rotary embeddings.
+
+All layers are pure functions over explicit param pytrees (nested dicts of
+jnp arrays); stacked variants for ``lax.scan`` are produced by vmapping the
+init over per-layer keys (see transformer.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import constrain
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def head_rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """RMSNorm over the last (head) dim of (..., H, Dh) q/k tensors."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def norm_init(dim: int):
+    return jnp.zeros((dim,), jnp.float32)  # stored as offset from 1.0
+
+
+# --------------------------------------------------------------------------- FFN
+def init_ffn(key, cfg: ModelConfig, d_ff: int):
+    dt = _dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, cfg.d_model, d_ff, dt),
+        "w_up": dense_init(k2, cfg.d_model, d_ff, dt),
+        "w_down": dense_init(k3, d_ff, cfg.d_model, dt, scale=1.0 / math.sqrt(d_ff)),
+    }
+
+
+def ffn(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Gated (SwiGLU / GeGLU) FFN; hidden sharded over tp_ff."""
+    act = jax.nn.gelu if cfg.embed_scale else jax.nn.silu   # gemma uses GeGLU
+    h = act(x @ params["w_gate"]) * (x @ params["w_up"])
+    h = constrain(h, "dp", None, "tp_ff")
+    return h @ params["w_down"]
+
+
+# --------------------------------------------------------------------------- rotary
+def rope_frequencies(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               upcast: bool = False) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (B, S) int32.
+
+    sin/cos are computed in f32 from integer positions but APPLIED in x's
+    dtype by default: f32 application (upcast=True, the pre-hillclimb
+    baseline) materializes f32 (B,S,H,Dh) intermediates per layer that
+    dominated the memory roofline term (§Perf)."""
+    dt = jnp.float32 if upcast else x.dtype
+    freqs = rope_frequencies(x.shape[-1], theta)                     # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs        # (B,S,Dh/2)
+    cos = jnp.cos(angles)[:, :, None, :].astype(dt)
+    sin = jnp.sin(angles)[:, :, None, :].astype(dt)
+    x1, x2 = jnp.split(x.astype(dt), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, dim: int) -> jax.Array:
+    """Whisper-style sinusoidal absolute position table (n_pos, dim)."""
+    log_timescale = math.log(10_000.0) / (dim // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(dim // 2, dtype=jnp.float32))
+    scaled = jnp.arange(n_pos, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+# --------------------------------------------------------------------------- embed
+def embed_lookup(table: jax.Array, ids: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Vocab-sharded table lookup (GSPMD partitions the gather; DESIGN.md §4)."""
+    x = jnp.take(table, ids, axis=0).astype(_dtype(cfg.dtype))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed_logits(x: jax.Array, table: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """(B,S,d) @ (V,d)^T -> (B,S,V) logits, vocab-sharded, optional softcap."""
+    logits = jnp.einsum("bsd,vd->bsv", x, table.astype(x.dtype))
+    logits = constrain(logits, "dp", None, "vocab")
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = jnp.tanh(logits.astype(jnp.float32) / c) * c
+    return logits
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap

@@ -1,0 +1,50 @@
+"""Public model API: build/init/apply for any assigned architecture."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+
+init_model = tfm.init_model
+decode_step = tfm.decode_step
+init_cache = tfm.init_cache
+pad_cache_to = tfm.pad_cache_to
+
+
+def apply_model(params, cfg: ModelConfig, batch: Dict):
+    """Train-mode forward: (logits, aux_loss)."""
+    logits, aux, _ = tfm.forward(params, cfg, batch, mode="train")
+    return logits, aux
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict,
+            cache_len: Optional[int] = None):
+    """Prefill forward: (logits, cache). Cache padded to ``cache_len``."""
+    logits, _, cache = tfm.forward(params, cfg, batch, mode="prefill")
+    if cache_len is not None:
+        cache = tfm.pad_cache_to(cache, cfg, cache_len)
+    return logits, cache
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Total parameter count via eval_shape (no allocation)."""
+    import math
+    shapes = jax.eval_shape(lambda k: init_model(k, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return sum(math.prod(l.shape) for l in jax.tree_util.tree_leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: only top_k experts active)."""
+    total = param_count(cfg)
+    if not cfg.n_experts:
+        return total
+    n_moe_layers = sum(1 for i in range(cfg.n_layers)
+                       if "moe" in cfg.ffn_kind(i))
+    expert_params = 3 * cfg.d_model * cfg.moe_d_ff
+    inactive = n_moe_layers * expert_params * (cfg.n_experts - cfg.top_k)
+    return total - inactive

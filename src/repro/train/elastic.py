@@ -1,0 +1,269 @@
+"""Elastic training runtime driven by Enel (beyond-paper integration).
+
+The trainer treats a training job as an iterative dataflow: every
+``steps_per_component`` optimizer steps form one *component* whose stages
+(data-load, step-compute, checkpoint) are timed and attributed exactly like
+the paper's Spark task sets.  At each component boundary Enel predicts the
+remaining runtime for every candidate DP degree and the trainer elastically
+re-meshes (checkpoint -> new mesh -> resharded restore) when the runtime
+target demands it.  Simulated worker failures shrink the DP degree and
+restart from the latest checkpoint — the paper's §V-B.4 scenario mapped onto
+SPMD training.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.graph import ComponentGraph, NodeAttrs, build_graph
+from repro.core.scaling import EnelScaler
+from repro.core.training import EnelTrainer
+from repro.core.autoencoder import embed_properties, train_autoencoder
+from repro.core.encoding import encode_properties
+from repro.data.pipeline import DataConfig, global_batch
+from repro.launch.mesh import make_mesh
+from repro.launch.shardings import (batch_shardings, logical_rules,
+                                    state_shardings)
+from repro.models.sharding import use_rules
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+from repro.train.optimizer import AdamWConfig
+from repro.train.train import init_train_state, make_train_step
+
+
+class TrainContextEncoder:
+    """Context vectors for training-stage nodes (same encoding substrate)."""
+
+    def __init__(self, cfg: ModelConfig, seed: int = 0):
+        self.cfg = cfg
+        props = self._base_props() + ["data-load", "train-step", "checkpoint"]
+        self.ae, _ = train_autoencoder(encode_properties(props), steps=200,
+                                       seed=seed)
+        self._cache: Dict[str, np.ndarray] = {}
+
+    def _base_props(self) -> List:
+        c = self.cfg
+        return [c.name, c.family, int(c.n_layers), int(c.d_model),
+                int(c.n_heads), "tpu v5e", int(c.vocab_size)]
+
+    def context(self, stage: str, dp: int) -> np.ndarray:
+        key = f"{stage}:{dp}"
+        if key not in self._cache:
+            u = embed_properties(self.ae, encode_properties(
+                self._base_props())).mean(0)
+            v = embed_properties(self.ae, encode_properties(
+                ["jax", "xla"])).mean(0)
+            w = embed_properties(self.ae, encode_properties(
+                [stage, int(dp)])).mean(0)
+            self._cache[key] = np.concatenate([u, v, w]).astype(np.float32)
+        return self._cache[key]
+
+
+@dataclass
+class ElasticConfig:
+    target_runtime: float                  # seconds for the whole job
+    n_components: int = 6
+    steps_per_component: int = 4
+    dp_choices: Tuple[int, ...] = (1, 2, 4, 8)
+    tp: int = 1
+    ckpt_dir: str = "/tmp/repro_elastic_ckpt"
+    ckpt_every_components: int = 1
+    fail_at_component: Optional[int] = None  # simulated worker-group loss
+    seed: int = 0
+
+
+@dataclass
+class ComponentLog:
+    comp_idx: int
+    dp: int
+    runtime: float
+    stage_times: Dict[str, float]
+    rescaled_from: Optional[int] = None
+    failed: bool = False
+
+
+class ElasticTrainer:
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig,
+                 ecfg: ElasticConfig, opt: Optional[AdamWConfig] = None):
+        self.cfg = cfg
+        self.shape = shape
+        self.ecfg = ecfg
+        self.opt = opt or AdamWConfig(warmup_steps=2, total_steps=200)
+        self.dcfg = DataConfig(seed=ecfg.seed)
+        self.encoder = TrainContextEncoder(cfg, seed=ecfg.seed)
+        self.enel = EnelTrainer(seed=ecfg.seed)
+        self.scaler = EnelScaler(self.enel,
+                                 (min(ecfg.dp_choices), max(ecfg.dp_choices)))
+        self.logs: List[ComponentLog] = []
+        self.graphs: List[ComponentGraph] = []
+        self.global_step = 0
+        self._mesh = None
+        self._step_fn = None
+        self._state = None
+        self._dp = max(ecfg.dp_choices)
+
+    # -------------------------------------------------------------- re-mesh
+    def _build(self, dp: int, restore_from: Optional[str] = None) -> None:
+        """(Re)build mesh + jitted step; optionally restore (resharded)."""
+        ecfg = self.ecfg
+        self._dp = dp
+        self._mesh = make_mesh(dp, ecfg.tp)
+        rules = logical_rules(self.cfg, self._mesh, self.shape)
+        self._rules = rules
+        with self._mesh, use_rules(self._mesh, rules):
+            if self._state is None:
+                state = init_train_state(jax.random.PRNGKey(ecfg.seed),
+                                         self.cfg, self.opt)
+            else:
+                state = self._state      # host copies; re-placed below
+            ssh = state_shardings(self.cfg, self._mesh, state)
+            if restore_from is not None:
+                state, _, _ = restore_checkpoint(restore_from, state,
+                                                 shardings=ssh)
+            else:
+                state = jax.device_put(state, ssh)
+            self._state = state
+            step = make_train_step(self.cfg, self.opt)
+            self._step_fn = jax.jit(
+                step, in_shardings=(ssh, None),
+                out_shardings=(ssh, NamedSharding(self._mesh, P())),
+                donate_argnums=0)
+
+    # ------------------------------------------------------------ components
+    def _run_component(self, comp_idx: int,
+                       rescaled_from: Optional[int]) -> ComponentLog:
+        ecfg = self.ecfg
+        t_data = t_step = 0.0
+        losses = []
+        with self._mesh, use_rules(self._mesh, self._rules):
+            for _ in range(ecfg.steps_per_component):
+                t0 = time.time()
+                batch = global_batch(self.dcfg, self.cfg, self.shape,
+                                     self.global_step,
+                                     seq_len=self.shape.seq_len)
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                t_data += time.time() - t0
+                t0 = time.time()
+                self._state, metrics = self._step_fn(self._state, batch)
+                jax.block_until_ready(metrics["loss"])
+                t_step += time.time() - t0
+                losses.append(float(metrics["loss"]))
+                self.global_step += 1
+        t_ckpt = 0.0
+        if comp_idx % ecfg.ckpt_every_components == 0:
+            t0 = time.time()
+            host_state = jax.tree_util.tree_map(np.asarray, self._state)
+            save_checkpoint(ecfg.ckpt_dir, self.global_step, host_state,
+                            metadata={"dp": self._dp})
+            t_ckpt = time.time() - t0
+        log = ComponentLog(comp_idx, self._dp, t_data + t_step + t_ckpt,
+                           {"data-load": t_data, "train-step": t_step,
+                            "checkpoint": t_ckpt},
+                           rescaled_from=rescaled_from)
+        self.logs.append(log)
+        return log
+
+    def _component_nodes(self, log: ComponentLog) -> List[NodeAttrs]:
+        nodes = []
+        a = float(log.rescaled_from or log.dp)
+        spc = self.ecfg.steps_per_component
+        for i, stage in enumerate(("data-load", "train-step", "checkpoint")):
+            t = log.stage_times[stage]
+            thr = spc / max(log.stage_times["train-step"], 1e-3)
+            metrics = np.array([
+                min(1.0, thr / 10.0),                  # throughput proxy
+                1.0 / log.dp,                          # comm share proxy
+                log.stage_times["data-load"] / max(log.runtime, 1e-6),
+                0.05, 0.0], np.float32)
+            nodes.append(NodeAttrs(
+                name=stage, context=self.encoder.context(stage, log.dp),
+                metrics=metrics, start_scaleout=a if i == 0 else log.dp,
+                end_scaleout=log.dp, time_fraction=1.0, runtime=t,
+                overhead=None))
+        return nodes
+
+    def _future_builder(self, comp_idx: int, a: float, z: float,
+                        preds: List[NodeAttrs]) -> ComponentGraph:
+        nodes = []
+        for i, stage in enumerate(("data-load", "train-step", "checkpoint")):
+            nodes.append(NodeAttrs(
+                name=stage, context=self.encoder.context(stage, int(z)),
+                metrics=None, start_scaleout=a if i == 0 else z,
+                end_scaleout=z, time_fraction=1.0 if a == z else 0.8))
+        n = len(nodes)
+        edges = [(i, i + 1) for i in range(n - 1)]
+        edges += [(n + j, 0) for j in range(len(preds))]
+        return build_graph(nodes + preds, edges, component_id=comp_idx)
+
+    # ----------------------------------------------------------------- run
+    def run(self) -> Dict:
+        ecfg = self.ecfg
+        self._build(self._dp)
+        elapsed = 0.0
+        prev_summary = None
+        rescaled_from = None
+        for comp_idx in range(ecfg.n_components):
+            if ecfg.fail_at_component == comp_idx and self._dp > min(
+                    ecfg.dp_choices):
+                # simulated worker-group failure: shrink DP, restart from ckpt
+                new_dp = max(d for d in ecfg.dp_choices if d < self._dp)
+                rescaled_from = self._dp
+                self._build(new_dp, restore_from=ecfg.ckpt_dir)
+                self.logs.append(ComponentLog(comp_idx, new_dp, 0.0, {},
+                                              rescaled_from, failed=True))
+            log = self._run_component(comp_idx, rescaled_from)
+            rescaled_from = None
+            elapsed += log.runtime
+            nodes = self._component_nodes(log)
+            from repro.core.graph import summary_node, historical_summary
+            preds = [p for p in (prev_summary,) if p is not None]
+            if comp_idx > 0:
+                h = historical_summary(
+                    self.scaler.hist_summaries.get(comp_idx - 1, []),
+                    float(self._dp))
+                if h is not None:
+                    preds.append(h)
+            self.graphs.append(_log_graph(nodes, preds, comp_idx))
+            self.scaler.record_component(comp_idx, nodes, log.runtime)
+            prev_summary = summary_node(nodes, f"P{comp_idx}")
+            # fine-tune + recommend
+            if comp_idx < ecfg.n_components - 1:
+                self.enel.observe_run(self.graphs, retrain_every=10 ** 9,
+                                      steps=0, fine_tune_steps=40)
+                dp_new, pred, _ = self.scaler.recommend(
+                    graph_builder=self._future_builder,
+                    next_comp=comp_idx + 1, n_components=ecfg.n_components,
+                    elapsed=elapsed, current_scaleout=self._dp,
+                    target_runtime=ecfg.target_runtime,
+                    current_summary=prev_summary)
+                dp_new = min(ecfg.dp_choices,
+                             key=lambda d: abs(d - dp_new))   # snap to choices
+                if dp_new != self._dp:
+                    rescaled_from = self._dp
+                    host_state = jax.tree_util.tree_map(np.asarray,
+                                                        self._state)
+                    save_checkpoint(ecfg.ckpt_dir, self.global_step,
+                                    host_state, metadata={"dp": self._dp})
+                    self._build(dp_new, restore_from=ecfg.ckpt_dir)
+        return {
+            "elapsed": elapsed, "target": ecfg.target_runtime,
+            "met_target": elapsed <= ecfg.target_runtime,
+            "dp_trace": [l.dp for l in self.logs],
+            "final_step": self.global_step,
+            "n_rescales": sum(1 for l in self.logs
+                              if l.rescaled_from is not None),
+        }
+
+
+def _log_graph(nodes: List[NodeAttrs], preds: List[NodeAttrs],
+               comp_idx: int) -> ComponentGraph:
+    n = len(nodes)
+    edges = [(i, i + 1) for i in range(n - 1)]
+    edges += [(n + j, 0) for j in range(len(preds))]
+    return build_graph(nodes + preds, edges, component_id=comp_idx)

@@ -1,0 +1,86 @@
+"""AdamW + clipping + LR schedules, from scratch (no optax in this image).
+
+Moments are stored in ``cfg.opt_dtype`` (bf16 for arctic-480b per DESIGN.md §6)
+and shard exactly like their parameters (ZeRO: the launcher maps both through
+the same path rules).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(opt: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to min_lr_ratio * lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(1, opt.warmup_steps))
+    prog = jnp.clip((step - opt.warmup_steps) /
+                    max(1, opt.total_steps - opt.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(math.pi * prog))
+    scale = opt.min_lr_ratio + (1.0 - opt.min_lr_ratio) * cos
+    return opt.lr * warm * scale
+
+
+def init_opt_state(params, opt_dtype: str) -> Dict:
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[opt_dtype]
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(params, grads, opt_state: Dict, opt: AdamWConfig
+                 ) -> Tuple[Dict, Dict, Dict]:
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"]
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, opt.clip_norm / (gnorm + 1e-9))
+    lr = lr_at(opt, step)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - opt.b1 ** t
+    bc2 = 1.0 - opt.b2 ** t
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu_f = opt.b1 * mu.astype(jnp.float32) + (1 - opt.b1) * g
+        nu_f = opt.b2 * nu.astype(jnp.float32) + (1 - opt.b2) * jnp.square(g)
+        mhat = mu_f / bc1
+        vhat = nu_f / bc2
+        delta = mhat / (jnp.sqrt(vhat) + opt.eps)
+        wd = opt.weight_decay if p.ndim >= 2 else 0.0   # no decay on norms/bias
+        new_p = p.astype(jnp.float32) - lr * (delta + wd * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), mu_f.astype(mu.dtype), nu_f.astype(nu.dtype)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(opt_state["mu"])
+    flat_nu = tdef.flatten_up_to(opt_state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_mu = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_nu = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step + 1}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

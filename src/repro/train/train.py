@@ -1,0 +1,88 @@
+"""train_step / eval loss. Pure functions closed over (cfg, opt)."""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import apply_model, init_model
+from repro.models.sharding import constrain
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def init_train_state(key, cfg: ModelConfig, opt: AdamWConfig) -> Dict:
+    params = init_model(key, cfg)
+    return {"params": params, "opt": init_opt_state(params, cfg.opt_dtype)}
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict) -> Tuple[jax.Array, Dict]:
+    logits, aux = apply_model(params, cfg, batch)
+    targets = batch["targets"]
+    if cfg.family == "vlm":                     # loss only over text positions
+        logits = logits[:, cfg.n_patches:]
+    mask = ((targets >= 0) & (targets < cfg.raw_vocab_size)).astype(jnp.float32)
+    logits = logits.astype(jnp.float32)
+    # GSPMD-friendly CE over the vocab-sharded axis: logsumexp + label pick
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(
+        logits, jnp.clip(targets, 0, cfg.vocab_size - 1)[..., None], axis=-1
+    )[..., 0]
+    nll = (lse - picked) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum(nll) / denom
+    loss = ce + AUX_LOSS_WEIGHT * aux
+    return loss, {"ce": ce, "aux": aux, "tokens": denom}
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig,
+                    grad_accum: int = 1):
+    """grad_accum > 1 scans microbatches, accumulating grads in
+    cfg.grad_accum_dtype (arctic: bf16 — memory note in DESIGN.md §6)."""
+    acc_dt = {"bfloat16": jnp.bfloat16,
+              "float32": jnp.float32}[cfg.grad_accum_dtype]
+
+    def train_step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
+        params = state["params"]
+        if grad_accum == 1:
+            (loss, parts), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
+        else:
+            def _split(x):
+                x = x.reshape(grad_accum, x.shape[0] // grad_accum,
+                              *x.shape[1:])
+                return constrain(x, None, "dp", *([None] * (x.ndim - 2)))
+
+            micro = jax.tree_util.tree_map(_split, batch)
+
+            def mb(carry, mbatch):
+                gacc, lacc = carry
+                (l, parts_i), g = jax.value_and_grad(
+                    lambda p: loss_fn(p, cfg, mbatch), has_aux=True)(params)
+                gacc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), gacc, g)
+                return (gacc, lacc + l), parts_i
+
+            gacc0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (gsum, lsum), parts_all = jax.lax.scan(
+                mb, (gacc0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, gsum)
+            loss = lsum / grad_accum
+            parts = jax.tree_util.tree_map(lambda x: jnp.mean(x), parts_all)
+        new_params, new_opt, om = adamw_update(params, grads, state["opt"], opt)
+        metrics = {"loss": loss, **parts, **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        loss, parts = loss_fn(params, cfg, batch)
+        return {"loss": loss, **parts}
+    return eval_step

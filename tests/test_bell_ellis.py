@@ -1,0 +1,75 @@
+"""Bell (initial allocation) and Ellis (baseline scaler) behaviour."""
+import numpy as np
+
+from repro.core.bell import (BellModel, NonParametricModel, ParametricModel,
+                             initial_scaleout)
+from repro.core.ellis import EllisScaler
+
+
+def _ernest(s, noise=0.0, rng=None):
+    t = 5.0 + 120.0 / s + 2.0 * np.log(s) + 0.05 * s
+    if noise and rng is not None:
+        t = t + rng.randn(*np.shape(s)) * noise
+    return t
+
+
+def test_parametric_fits_ernest_curve():
+    s = np.array([4, 8, 12, 16, 24, 32, 36], float)
+    m = ParametricModel().fit(s, _ernest(s))
+    pred = m.predict(np.array([6.0, 20.0]))
+    np.testing.assert_allclose(pred, _ernest(np.array([6.0, 20.0])), rtol=0.05)
+
+
+def test_nonparametric_interpolates_exactly_at_knots():
+    s = np.array([4, 8, 16.0])
+    t = np.array([10, 6, 4.0])
+    m = NonParametricModel().fit(s, t)
+    np.testing.assert_allclose(m.predict(s), t, rtol=1e-6)
+
+
+def test_bell_cv_prefers_parametric_on_smooth_data():
+    rng = np.random.RandomState(0)
+    s = np.array([4, 6, 8, 12, 16, 20, 24, 28, 32, 36], float)
+    bell = BellModel().fit(s, _ernest(s, 0.1, rng))
+    assert bell.choice == "parametric"
+
+
+def test_bell_cv_prefers_nonparametric_on_steppy_data():
+    s = np.array([4, 6, 8, 12, 16, 20, 24, 28, 32, 36], float)
+    t = np.where(s < 16, 100.0, 10.0)          # non-Ernest cliff
+    bell = BellModel().fit(s, t)
+    assert bell.choice == "nonparametric"
+
+
+def test_initial_scaleout_smallest_compliant():
+    hist = [(s, _ernest(s)) for s in [4, 8, 12, 16, 24, 32, 36]]
+    target = _ernest(16) + 0.5
+    s = initial_scaleout(hist, target, (4, 36))
+    assert s <= 16
+    assert _ernest(s) <= target * 1.1
+
+
+def test_ellis_recommend_meets_target():
+    ellis = EllisScaler((4, 36), rescale_overhead=2.0)
+    rng = np.random.RandomState(0)
+    for _ in range(6):
+        for comp in range(5):
+            for s in (4, 8, 16, 24, 32):
+                ellis.observe_component(comp, s, _ernest(s, 0.2, rng) / 5)
+    ellis.refit()
+    target = sum(_ernest(24) / 5 for _ in range(5)) * 1.2
+    s, predicted = ellis.recommend(next_comp=0, n_components=5, elapsed=0.0,
+                                   current_scaleout=4, target_runtime=target)
+    assert predicted <= target
+    assert 4 <= s <= 36          # smallest compliant scale-out in range
+
+
+def test_ellis_falls_back_to_argmin_when_infeasible():
+    ellis = EllisScaler((4, 8))
+    for comp in range(3):
+        for s in (4, 6, 8):
+            ellis.observe_component(comp, s, 100.0 / s)
+    ellis.refit()
+    s, pred = ellis.recommend(next_comp=0, n_components=3, elapsed=0.0,
+                              current_scaleout=4, target_runtime=1.0)
+    assert s == 8                # least violation = max scale-out here

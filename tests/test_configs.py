@@ -1,0 +1,85 @@
+"""Config registry invariants for all ten assigned architectures."""
+import pytest
+
+from repro.configs import (SHAPES, all_cells, get_config, get_shape,
+                           list_archs, shape_applicable, smoke_config)
+
+EXPECTED = {
+    "olmoe-1b-7b": dict(n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+                        n_experts=64, top_k=8, vocab_size=50304),
+    "arctic-480b": dict(n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+                        n_experts=128, top_k=2, vocab_size=32000),
+    "whisper-medium": dict(n_layers=24, d_model=1024, n_heads=16,
+                           enc_layers=24, raw_vocab_size=51865),
+    "gemma2-2b": dict(n_layers=26, d_model=2304, n_heads=8, n_kv_heads=4,
+                      d_ff=9216, vocab_size=256000),
+    "gemma3-27b": dict(n_layers=62, d_model=5376, n_heads=32, n_kv_heads=16,
+                       d_ff=21504, vocab_size=262144),
+    "qwen3-0.6b": dict(n_layers=28, d_model=1024, n_heads=16, n_kv_heads=8,
+                       d_ff=3072, vocab_size=151936, qk_norm=True),
+    "qwen2.5-14b": dict(n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+                        d_ff=13824, vocab_size=152064, qkv_bias=True),
+    "pixtral-12b": dict(n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8,
+                        d_ff=14336, vocab_size=131072, n_patches=1024),
+    "jamba-v0.1-52b": dict(n_layers=32, d_model=4096, n_heads=32,
+                           n_kv_heads=8, d_ff=14336, n_experts=16, top_k=2,
+                           vocab_size=65536),
+    "xlstm-350m": dict(n_layers=24, d_model=1024, n_heads=4, d_ff=0,
+                       vocab_size=50304),
+}
+
+
+def test_registry_complete():
+    assert sorted(list_archs()) == sorted(EXPECTED)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_published_values(arch):
+    cfg = get_config(arch)
+    for k, v in EXPECTED[arch].items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_layer_pattern_consistency(arch):
+    cfg = get_config(arch)
+    assert cfg.n_layers == cfg.n_groups * cfg.layer_period + cfg.tail_layers
+    # pattern must repeat with the group period so scan params stack
+    for j in range(cfg.layer_period):
+        kinds = {cfg.layer_kind(g * cfg.layer_period + j)
+                 for g in range(cfg.n_groups)}
+        fkinds = {cfg.ffn_kind(g * cfg.layer_period + j)
+                  for g in range(cfg.n_groups)}
+        assert len(kinds) == 1 and len(fkinds) == 1, (arch, j)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_tp_divisibility_for_sharding(arch):
+    """Dims that the sharding rules split 16-way must divide."""
+    cfg = get_config(arch)
+    assert cfg.vocab_size % 16 == 0
+    assert cfg.d_model % 16 == 0
+    if cfg.d_ff:
+        assert cfg.d_ff % 16 == 0
+    if cfg.n_experts:
+        assert cfg.n_experts % 16 == 0
+
+
+def test_cells_40_with_8_skips():
+    cells = all_cells()
+    assert len(cells) == 40
+    skipped = [(a, s) for a, s, ok, _ in cells if not ok]
+    assert len(skipped) == 8
+    assert all(s == "long_500k" for _, s in skipped)
+    runnable_long = [a for a, s, ok, _ in cells if s == "long_500k" and ok]
+    assert sorted(runnable_long) == ["jamba-v0.1-52b", "xlstm-350m"]
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_smoke_config_preserves_family(arch):
+    cfg = get_config(arch)
+    sm = smoke_config(cfg)
+    assert sm.family == cfg.family
+    assert sm.layer_period == cfg.layer_period
+    assert sm.n_layers <= 2 * cfg.layer_period
+    assert (sm.n_experts > 0) == (cfg.n_experts > 0)

@@ -1,0 +1,60 @@
+"""Hypothesis property tests for the context-encoding layer (eqs. 1-2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.autoencoder import train_autoencoder
+from repro.core.encoding import (DEFAULT_L, binarizer, encode_property,
+                                 hasher, is_natural)
+
+
+@given(st.text(min_size=1, max_size=60))
+@settings(max_examples=60, deadline=None)
+def test_hasher_unit_sphere_or_zero(s):
+    q = hasher(s)
+    norm = np.linalg.norm(q)
+    assert q.shape == (DEFAULT_L,)
+    assert abs(norm - 1.0) < 1e-5 or norm == 0.0   # eq.2 projection
+
+
+@given(st.text(min_size=1, max_size=60))
+@settings(max_examples=30, deadline=None)
+def test_hasher_deterministic(s):
+    np.testing.assert_array_equal(hasher(s), hasher(s))
+
+
+@given(st.integers(min_value=0, max_value=2 ** DEFAULT_L - 1))
+@settings(max_examples=100, deadline=None)
+def test_binarizer_roundtrip(p):
+    bits = binarizer(p)
+    assert set(np.unique(bits)).issubset({0.0, 1.0})
+    decoded = int(sum(int(b) << i for i, b in enumerate(bits)))
+    assert decoded == p                             # unique encoding
+
+
+@given(st.one_of(st.integers(min_value=0, max_value=10 ** 6),
+                 st.text(min_size=1, max_size=30)))
+@settings(max_examples=60, deadline=None)
+def test_lambda_prefix_flags_method(p):
+    vec = encode_property(p)
+    assert vec.shape == (DEFAULT_L + 1,)
+    assert vec[0] == (1.0 if is_natural(p) else 0.0)  # eq.1 lambda
+
+
+def test_binarizer_domain_guard():
+    with pytest.raises(ValueError):
+        binarizer(2 ** DEFAULT_L)
+    with pytest.raises(ValueError):
+        binarizer(-1)
+
+
+def test_autoencoder_reconstructs():
+    rng = np.random.RandomState(0)
+    props = [rng.randint(0, 1000) for _ in range(20)] + \
+        [f"job param {i} iterations" for i in range(20)]
+    from repro.core.encoding import encode_properties
+    vecs = encode_properties(props)
+    _, loss = train_autoencoder(vecs, steps=300)
+    base = float(np.mean(vecs ** 2))               # predict-zero baseline
+    assert loss < base * 0.5

@@ -1,0 +1,119 @@
+"""Enel model unit tests: eq.5 critical-path accumulation, eq.6 softmax
+normalization, parameter budget, training convergence, scale-out sensitivity
+through summary-node propagation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import forward_batch as forward, init_enel, n_params
+from repro.core.graph import (CTX_DIM, MAX_NODES, N_METRICS, NodeAttrs,
+                              build_graph, historical_summary, stack_graphs,
+                              summary_node)
+from repro.core.training import EnelTrainer
+
+KEY = jax.random.PRNGKey(0)
+RNG = np.random.RandomState(0)
+
+
+def _node(name, rt=None, s=8.0, summary=False, metrics=True):
+    return NodeAttrs(
+        name=name, context=RNG.randn(CTX_DIM).astype(np.float32),
+        metrics=RNG.rand(N_METRICS).astype(np.float32) if metrics else None,
+        start_scaleout=s, end_scaleout=s, time_fraction=1.0, runtime=rt,
+        is_summary=summary)
+
+
+def _to_batch(g):
+    return {k: jnp.asarray(v) for k, v in stack_graphs([g]).items()}
+
+
+def test_param_budget_close_to_paper():
+    p = init_enel(KEY)
+    n = n_params(p)
+    assert 4000 <= n <= 7000, n     # paper: 5155
+
+
+def test_edge_weights_normalized():
+    g = build_graph([_node("a"), _node("b"), _node("c")],
+                    [(0, 2), (1, 2)])
+    out = forward(init_enel(KEY), _to_batch(g))
+    e = np.asarray(out["edges"])[0]
+    np.testing.assert_allclose(e[2].sum(), 1.0, atol=1e-5)  # two preds
+    assert e[0].sum() == 0 and e[1].sum() == 0              # roots: none
+
+
+def test_eq5_critical_path_diamond():
+    """tt(last) = t(last) + max over branches (diamond DAG)."""
+    nodes = [_node(c) for c in "abcd"]
+    g = build_graph(nodes, [(0, 1), (0, 2), (1, 3), (2, 3)])
+    out = forward(init_enel(KEY), _to_batch(g))
+    t = np.asarray(out["runtime"])[0]
+    tt = np.asarray(out["acc_runtime"])[0]
+    np.testing.assert_allclose(tt[0], t[0], rtol=1e-5)
+    np.testing.assert_allclose(tt[3],
+                               t[3] + max(t[1] + t[0], t[2] + t[0]),
+                               rtol=1e-4)
+    np.testing.assert_allclose(out["total_runtime"][0], tt.max(), rtol=1e-5)
+
+
+def test_summary_nodes_excluded_from_runtime():
+    nodes = [_node("a"), _node("b"), _node("P", summary=True)]
+    g = build_graph(nodes, [(0, 1), (2, 0)])
+    out = forward(init_enel(KEY), _to_batch(g))
+    tt = np.asarray(out["acc_runtime"])[0]
+    assert tt[2] == 0.0                          # summary carries no runtime
+    t = np.asarray(out["runtime"])[0]
+    np.testing.assert_allclose(tt[1], t[0] + t[1], rtol=1e-4)
+
+
+def test_training_converges_and_is_scaleout_sensitive():
+    def mk(k, s, observe=True):
+        nodes = []
+        for i in range(4):
+            ctx = np.tanh(np.random.RandomState(50 + i).randn(CTX_DIM)
+                          ).astype(np.float32)
+            rt = (8.0 / s + 0.4 * i) if observe else None
+            met = np.array([0.5, 1.0 / s, 0.2, 0.1, 0.0],
+                           np.float32) if observe else None
+            nodes.append(NodeAttrs(f"st{i}", ctx, met, s, s, 1.0, rt))
+        return nodes
+
+    hist = {k: [] for k in range(4)}
+    graphs = []
+    for _ in range(6):
+        for k in range(4):
+            s = float(RNG.choice([4, 8, 16, 32]))
+            nodes = mk(k, s)
+            preds = []
+            h = historical_summary(hist[k], s)
+            if h is not None:
+                preds.append(h)
+            n = len(nodes)
+            edges = [(i, i + 1) for i in range(n - 1)] + \
+                [(n + j, 0) for j in range(len(preds))]
+            graphs.append(build_graph(nodes + preds, edges, k))
+            hist[k].append(summary_node(nodes, f"P{k}"))
+    tr = EnelTrainer(seed=1)
+    l_start = tr.fit(graphs, steps=8)
+    l_end = tr.fit(graphs, steps=256, from_scratch=True)
+    assert l_end < l_start * 0.5
+
+    def unobserved(s):
+        nodes = mk(0, s, observe=False)
+        h = historical_summary(hist[0], s)
+        n = len(nodes)
+        edges = [(i, i + 1) for i in range(n - 1)] + [(n, 0)]
+        return build_graph(nodes + [h], edges, 0)
+
+    p4, p32 = tr.predict([unobserved(4.0), unobserved(32.0)])
+    assert p4 > p32, (p4, p32)    # more executors -> faster
+
+
+def test_trainer_predict_matches_bucketing():
+    tr = EnelTrainer(seed=0)
+    g = build_graph([_node("a", rt=1.0)], [])
+    one = tr.predict([g])
+    three = tr.predict([g, g, g])
+    np.testing.assert_allclose(one[0], three[0], rtol=1e-5)
+    np.testing.assert_allclose(three[0], three[2], rtol=1e-5)

@@ -1,0 +1,60 @@
+"""The trip-count-aware HLO cost model against programs with known costs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_cost import HloCostModel, analyze
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_dot_flops_counted():
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    text = _compile_text(lambda x, y: x @ y, a, b)
+    got = analyze(text)["flops"]
+    assert abs(got - 2 * 64 * 128 * 256) / (2 * 64 * 128 * 256) < 0.05, got
+
+
+def test_while_loop_multiplies_flops():
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def loop(x):
+        def body(c, _):
+            return c @ c * 1e-3, None
+        out, _ = jax.lax.scan(body, x, None, length=17)
+        return out
+
+    text = _compile_text(loop, a)
+    got = analyze(text)["flops"]
+    expected = 17 * 2 * 64 * 64 * 64
+    assert abs(got - expected) / expected < 0.05, (got, expected)
+
+
+def test_nested_scan_multiplies():
+    a = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+
+    def loop(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ ci * 1e-3, None
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, None
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+
+    text = _compile_text(loop, a)
+    got = analyze(text)["flops"]
+    expected = 15 * 2 * 32 ** 3
+    assert abs(got - expected) / expected < 0.05, (got, expected)
+
+
+def test_entry_detected_and_bytes_positive():
+    a = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    text = _compile_text(lambda x: jnp.tanh(x @ x), a)
+    m = HloCostModel(text)
+    assert m.entry in m.comps
+    res = analyze(text)
+    assert res["hbm_bytes"] >= 3 * 128 * 128 * 4   # two reads + one write min

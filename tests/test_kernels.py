@@ -1,0 +1,102 @@
+"""Pallas kernel sweeps (shapes x dtypes) vs pure-jnp oracles, plus the
+models/ssm chunkwise scan vs the fully-recurrent oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import mha
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_decode.ops import decode_attn
+from repro.kernels.flash_decode.ref import decode_ref
+from repro.kernels.mlstm_chunk.ops import mlstm
+from repro.kernels.mlstm_chunk.ref import mlstm_recurrent_ref
+
+RNG = np.random.RandomState(0)
+
+
+def _tol(dtype):
+    return 2e-5 if dtype == jnp.float32 else 3e-2
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,kh,d,causal,win,cap",
+    [(2, 128, 4, 2, 32, True, 0, 0.0),
+     (1, 256, 4, 4, 64, True, 64, 50.0),
+     (2, 96, 8, 2, 32, False, 0, 0.0),      # padded, non-causal
+     (1, 64, 2, 1, 128, True, 32, 0.0),
+     (1, 192, 6, 3, 32, True, 0, 30.0)])
+def test_flash_attention_sweep(b, s, h, kh, d, causal, win, cap, dtype):
+    q = jnp.asarray(RNG.randn(b, s, h, d), dtype)
+    k = jnp.asarray(RNG.randn(b, s, kh, d), dtype)
+    v = jnp.asarray(RNG.randn(b, s, kh, d), dtype)
+    out = mha(q, k, v, causal=causal, window=win, softcap=cap,
+              block_q=64, block_k=64)
+    ref = attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, window=win,
+        softcap=cap).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,kh,d,pos,win",
+    [(2, 256, 4, 2, 32, 100, 0),
+     (1, 512, 8, 8, 64, 511, 128),
+     (2, 128, 4, 1, 32, 0, 0),
+     (1, 128, 2, 2, 128, 64, 32)])
+def test_flash_decode_sweep(b, s, h, kh, d, pos, win, dtype):
+    q = jnp.asarray(RNG.randn(b, 1, h, d), dtype)
+    ck = jnp.asarray(RNG.randn(b, s, kh, d), dtype)
+    cv = jnp.asarray(RNG.randn(b, s, kh, d), dtype)
+    out = decode_attn(q, ck, cv, jnp.int32(pos), window=win, block_k=64)
+    ref = decode_ref(q[:, 0], ck.transpose(0, 2, 1, 3),
+                     cv.transpose(0, 2, 1, 3), jnp.int32(pos),
+                     window=win)[:, None]
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("b,s,h,d,chunk",
+                         [(2, 128, 2, 32, 32), (1, 256, 4, 64, 64),
+                          (1, 64, 1, 128, 16)])
+def test_mlstm_chunk_sweep(b, s, h, d, chunk, dtype):
+    q = jnp.asarray(RNG.randn(b, s, h, d), dtype)
+    k = jnp.asarray(RNG.randn(b, s, h, d), dtype)
+    v = jnp.asarray(RNG.randn(b, s, h, d), dtype)
+    ig = jnp.asarray(RNG.randn(b, s, h), jnp.float32)
+    fg = jnp.asarray(RNG.randn(b, s, h) + 2, jnp.float32)
+    out = mlstm(q, k, v, ig, fg, chunk=chunk)
+    ref = mlstm_recurrent_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), ig.transpose(0, 2, 1),
+        fg.transpose(0, 2, 1)).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_model_mlstm_scan_matches_recurrent_oracle():
+    """models/ssm.mlstm_chunk_scan implements the same math as the kernel."""
+    from repro.models.ssm import mlstm_chunk_scan
+    b, s, h, d = 1, 64, 2, 16
+    q = jnp.asarray(RNG.randn(b, s, h, d), jnp.float32)
+    k = jnp.asarray(RNG.randn(b, s, h, d), jnp.float32) / np.sqrt(d)
+    v = jnp.asarray(RNG.randn(b, s, h, d), jnp.float32)
+    ig = jnp.asarray(RNG.randn(b, s, h), jnp.float32)
+    f_pre = jnp.asarray(RNG.randn(b, s, h) + 2, jnp.float32)
+    lf = jax.nn.log_sigmoid(f_pre)
+    out, _ = mlstm_chunk_scan(q, k, v, ig, lf)
+    ref = mlstm_recurrent_ref(
+        q.transpose(0, 2, 1, 3),
+        (k * np.sqrt(d)).transpose(0, 2, 1, 3),      # ref divides by sqrt(d)
+        v.transpose(0, 2, 1, 3), ig.transpose(0, 2, 1),
+        f_pre.transpose(0, 2, 1)).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-4, rtol=2e-4)

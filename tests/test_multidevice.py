@@ -1,0 +1,124 @@
+"""Multi-device semantics via subprocess (fresh jax with 8 fake devices):
+sharding rules, elastic re-mesh + resharded restore, compressed DP psum."""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_sharding_rules_across_archs():
+    print(run_py("""
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import get_config, get_shape
+        from repro.launch.mesh import _mk
+        from repro.launch.shardings import logical_rules, param_spec
+        shape = get_shape("train_4k")
+        # tp=4: heads divide for olmoe (16) and qwen2.5 (40)
+        mesh4 = _mk((2, 4), ("data", "model"))
+        r = logical_rules(get_config("olmoe-1b-7b"), mesh4, shape)
+        assert r["tp_heads"] == "model" and r["ep"] == "model", r
+        r = logical_rules(get_config("qwen2.5-14b"), mesh4, shape)
+        assert r["tp_heads"] == "model", r
+        # tp=3: 40 heads / 8 kv heads do NOT divide -> seq-parallel attention
+        mesh3 = _mk((2, 3), ("data", "model"))
+        r = logical_rules(get_config("qwen2.5-14b"), mesh3, shape)
+        assert r["tp_heads"] is None and r["kv_seq"] == "model", r
+        r = logical_rules(get_config("jamba-v0.1-52b"), mesh3,
+                          get_shape("long_500k"))
+        assert r["dp"] is None and r["cache_seq"] == ("data", "model"), r
+        # divisibility guard drops axes that do not divide
+        class L:  # fake leaf
+            ndim = 2
+            shape = (7, 1024)
+        from jax.tree_util import DictKey
+        spec = param_spec(mesh4, (DictKey("attn"), DictKey("wq")), L)
+        assert spec == P(None, "model"), spec   # 7 % 2 != 0 -> dropped
+        print("RULES-OK")
+    """))
+
+
+@pytest.mark.slow
+def test_elastic_rescale_and_failure_recovery(tmp_path):
+    out = run_py(f"""
+        import jax
+        from repro.configs import get_config, smoke_config, TRAIN_4K
+        import dataclasses
+        from repro.train.elastic import ElasticConfig, ElasticTrainer
+        cfg = smoke_config(get_config("qwen3-0.6b"))
+        shape = dataclasses.replace(TRAIN_4K, seq_len=32, global_batch=8)
+        ecfg = ElasticConfig(target_runtime=3600.0, n_components=4,
+                             steps_per_component=2, dp_choices=(2, 4, 8),
+                             ckpt_dir=r"{tmp_path}/ck", fail_at_component=2,
+                             seed=0)
+        tr = ElasticTrainer(cfg, shape, ecfg)
+        res = tr.run()
+        assert res["final_step"] == 8, res
+        assert res["n_rescales"] >= 1, res       # the injected failure
+        assert len(set(res["dp_trace"])) >= 2, res
+        print("ELASTIC-OK", res["dp_trace"])
+    """)
+    assert "ELASTIC-OK" in out
+
+
+@pytest.mark.slow
+def test_compressed_psum_multidevice():
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import _mk
+        from repro.train.compression import psum_compressed
+        mesh = _mk((8,), ("data",))
+        rng = np.random.RandomState(0)
+        g = jnp.asarray(rng.randn(8, 256))
+        e = jnp.zeros((8, 256))
+        f = jax.shard_map(lambda gg, ee: psum_compressed(gg[0], ee[0], "data"),
+                          mesh=mesh, in_specs=(P("data"), P("data")),
+                          out_specs=(P(), P("data")), check_vma=False)
+        out, err = f(g, e)
+        true = np.mean(np.asarray(g), axis=0)
+        rel = np.abs(np.asarray(out) - true).max() / (np.abs(true).max())
+        assert rel < 0.05, rel
+        print("PSUM-OK", rel)
+    """)
+    assert "PSUM-OK" in out
+
+
+@pytest.mark.slow
+def test_pipeline_parallel_lowering():
+    """Optional PP feature: GPipe-style ppermute schedule lowers and runs."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.train.pipeline import pipelined_forward, make_stage_params
+        from repro.launch.mesh import _mk
+        mesh = _mk((4,), ("stage",))
+        params = make_stage_params(jax.random.PRNGKey(0), n_stages=4, d=16)
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 4, 16))  # (mb, b, d)
+        y = pipelined_forward(params, x, mesh)
+        y_ref = x
+        import repro.train.pipeline as pl_mod
+        for i in range(4):
+            y_ref = pl_mod.stage_fn({k: v[i] for k, v in params.items()}, y_ref)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=2e-4, atol=2e-4)
+        print("PP-OK")
+    """)
+    assert "PP-OK" in out

@@ -1,0 +1,124 @@
+"""Dataflow simulator properties: Ernest scaling, failure-injection rules,
+rescale overhead accounting, dataset generators."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.dataflow.simulator import (FAILURE_WINDOW, ClusterSim,
+                                      rescale_overhead)
+from repro.dataflow.workloads import (DATASETS, JOBS, make_multiclass,
+                                      make_points, make_vandermonde)
+
+
+def test_jobs_match_table2():
+    assert JOBS["lr"].iterations == 20
+    assert JOBS["mpc"].iterations == 20
+    assert "4 layers" in JOBS["mpc"].params
+    assert JOBS["kmeans"].iterations == 10
+    assert JOBS["kmeans"].dataset.name == "Points"
+    assert JOBS["gbt"].dataset.name == "Vandermonde"
+    assert DATASETS["multiclass"].size_gb == 27.0
+    assert DATASETS["points"].size_gb == 48.0
+    assert DATASETS["vandermonde"].size_gb == 35.0
+    # GBT decomposes into more stages per iteration than the others (Fig. 5)
+    assert len(JOBS["gbt"].iter_stages) > len(JOBS["lr"].iter_stages)
+
+
+def test_datasets_generators():
+    x, y = make_multiclass(256)
+    assert x.shape == (256, 200) and set(np.unique(y)) <= {0, 1, 2}
+    xv, yv = make_vandermonde(128)
+    assert xv.shape == (128, 19)
+    pts = make_points(512)
+    assert pts.shape == (512, 2)
+
+
+@pytest.mark.parametrize("job", ["lr", "mpc", "kmeans", "gbt"])
+def test_runtime_decreases_with_scaleout(job):
+    spec = JOBS[job]
+    assert spec.base_runtime(8) > spec.base_runtime(32)
+
+
+def test_mean_simulated_runtime_tracks_ground_truth():
+    sim = ClusterSim(seed=0, interference_scale=0.0)
+    job = JOBS["kmeans"]
+    runs = []
+    for _ in range(5):
+        total = 0.0
+        clock = 0.0
+        for k in range(job.n_components):
+            comp = sim.run_component(job, k, clock=clock, start_scaleout=16,
+                                     end_scaleout=16, inject_failures=False,
+                                     failures_log=[])
+            total += comp.runtime
+            clock += comp.runtime
+        runs.append(total)
+    assert abs(np.mean(runs) - job.base_runtime(16)) / job.base_runtime(16) < 0.15
+
+
+def test_failures_only_above_four_executors():
+    sim = ClusterSim(seed=1)
+    job = JOBS["lr"]
+    log4, log16 = [], []
+    for k in range(job.n_components):
+        sim.run_component(job, k, clock=k * 100.0, start_scaleout=4,
+                          end_scaleout=4, inject_failures=True,
+                          failures_log=log4)
+        sim.run_component(job, k, clock=k * 100.0, start_scaleout=16,
+                          end_scaleout=16, inject_failures=True,
+                          failures_log=log16)
+    assert len(log4) == 0                      # paper: only while > 4 alive
+    assert len(log16) > 0
+
+
+def test_failures_slow_down_runs():
+    def total(inject, seed):
+        sim = ClusterSim(seed=seed)
+        job = JOBS["kmeans"]
+        clock, tot = 0.0, 0.0
+        for k in range(job.n_components):
+            c = sim.run_component(job, k, clock=clock, start_scaleout=24,
+                                  end_scaleout=24, inject_failures=inject,
+                                  failures_log=[])
+            tot += c.runtime
+            clock += c.runtime
+        return tot
+
+    normal = np.mean([total(False, s) for s in range(4)])
+    failed = np.mean([total(True, s) for s in range(4)])
+    assert failed > normal * 1.02
+
+
+@given(st.integers(4, 36), st.integers(4, 36))
+@settings(max_examples=40, deadline=None)
+def test_rescale_overhead_properties(a, z):
+    o = rescale_overhead(a, z)
+    if a == z:
+        assert o == 0.0
+    else:
+        assert o >= rescale_overhead(a, a + 1 if a < 36 else a - 1) or \
+            abs(z - a) <= 1
+        assert o == rescale_overhead(z, a)      # symmetric
+
+
+def test_rescale_charged_to_first_stage():
+    sim = ClusterSim(seed=2, interference_scale=0.0)
+    comp = sim.run_component(JOBS["lr"], 1, clock=0.0, start_scaleout=8,
+                             end_scaleout=16, inject_failures=False,
+                             failures_log=[])
+    assert comp.stages[0].overhead > 0
+    assert all(s.overhead == 0 for s in comp.stages[1:])
+    assert comp.stages[0].start_scaleout == 8
+    assert comp.stages[0].end_scaleout == 16
+
+
+def test_metrics_bounded():
+    sim = ClusterSim(seed=3)
+    comp = sim.run_component(JOBS["mpc"], 2, clock=0.0, start_scaleout=12,
+                             end_scaleout=12, inject_failures=False,
+                             failures_log=[])
+    for st_ in comp.stages:
+        assert st_.metrics.shape == (5,)
+        assert np.all(np.isfinite(st_.metrics))
+        assert st_.metrics[0] <= 1.0 and st_.metrics[0] >= 0.0

@@ -1,0 +1,105 @@
+"""End-to-end behaviour of the paper's system: Enel's dynamic scaling meets
+runtime targets that a static allocation misses, and reacts to failures."""
+import numpy as np
+import pytest
+
+from repro.core.graph import NodeAttrs, build_graph, historical_summary, summary_node
+from repro.core.scaling import EnelScaler
+from repro.core.training import EnelTrainer
+from repro.core.graph import CTX_DIM
+from repro.dataflow.simulator import ClusterSim
+from repro.dataflow.workloads import JOBS
+
+RNG = np.random.RandomState(0)
+
+
+def _ctx(i):
+    return np.tanh(np.random.RandomState(300 + i).randn(CTX_DIM)
+                   ).astype(np.float32)
+
+
+def _nodes(k, a, z, observe=True, slow=1.0):
+    nodes = []
+    for i in range(3):
+        s = a if i == 0 else z
+        rt = slow * (20.0 / z + 0.5) if observe else None
+        met = np.array([0.6, 1.0 / z, 0.2, 0.08, 0.0],
+                       np.float32) if observe else None
+        nodes.append(NodeAttrs(f"st{i}", _ctx(i), met, s, z, 1.0, rt))
+    return nodes
+
+
+def _graph(nodes, preds, k):
+    n = len(nodes)
+    edges = [(i, i + 1) for i in range(n - 1)] + \
+        [(n + j, 0) for j in range(len(preds))]
+    return build_graph(nodes + preds, edges, k)
+
+
+@pytest.fixture(scope="module")
+def trained_scaler():
+    trainer = EnelTrainer(seed=0)
+    scaler = EnelScaler(trainer, (4, 36))
+    graphs = []
+    for _ in range(8):
+        for k in range(6):
+            s = int(RNG.choice([4, 8, 16, 24, 32, 36]))
+            nodes = _nodes(k, s, s)
+            preds = []
+            if k > 0:
+                h = historical_summary(scaler.hist_summaries.get(k - 1, []),
+                                       float(s))
+                if h is not None:
+                    preds.append(h)
+            graphs.append(_graph(nodes, preds, k))
+            scaler.record_component(k, nodes, sum(n.runtime for n in nodes))
+    trainer.fit(graphs, steps=256, from_scratch=True)
+    return scaler
+
+
+def test_recommendation_scales_out_for_tight_targets(trained_scaler):
+    builder = lambda k, a, z, preds: _graph(_nodes(k, a, z, observe=False),
+                                            preds, k)
+    # tight target -> large scale-out; loose target -> small scale-out
+    s_tight, _, _ = trained_scaler.recommend(
+        graph_builder=builder, next_comp=2, n_components=6, elapsed=10.0,
+        current_scaleout=8, target_runtime=10.0 + 4 * (20 / 30 + 1.5))
+    s_loose, _, _ = trained_scaler.recommend(
+        graph_builder=builder, next_comp=2, n_components=6, elapsed=10.0,
+        current_scaleout=8, target_runtime=10.0 + 4 * (20 / 5 + 1.5))
+    assert s_tight > s_loose, (s_tight, s_loose)
+
+
+def test_totals_monotone_decreasing_in_scaleout(trained_scaler):
+    builder = lambda k, a, z, preds: _graph(_nodes(k, a, z, observe=False),
+                                            preds, k)
+    _, _, totals = trained_scaler.recommend(
+        graph_builder=builder, next_comp=1, n_components=6, elapsed=0.0,
+        current_scaleout=16, target_runtime=1.0)
+    lo = np.mean([totals[s] for s in (4, 5, 6)])
+    hi = np.mean([totals[s] for s in (32, 34, 36)])
+    assert lo > hi               # ground truth is 1/z-dominated
+
+
+def test_dynamic_scaling_beats_static_under_failures():
+    """The whole point of the paper: reacting beats a fixed allocation when
+    the environment degrades (failures slow the job down)."""
+    job = JOBS["kmeans"]
+
+    def run(scale_fn, seed):
+        sim = ClusterSim(seed=seed)
+        clock = 0.0
+        s_prev = s = 12
+        for k in range(job.n_components):
+            comp = sim.run_component(job, k, clock=clock, start_scaleout=s_prev,
+                                     end_scaleout=s, inject_failures=True,
+                                     failures_log=[])
+            clock += comp.runtime
+            s_prev = s
+            s = scale_fn(k, s)
+        return clock
+
+    static = np.mean([run(lambda k, s: s, i) for i in range(3)])
+    # "oracle reaction": scale out hard after the first component
+    reactive = np.mean([run(lambda k, s: 32, i) for i in range(3)])
+    assert reactive < static
