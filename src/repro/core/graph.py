@@ -117,6 +117,128 @@ def stack_graphs(graphs: Sequence[ComponentGraph]) -> Dict[str, np.ndarray]:
                               "is_summary")}
 
 
+# --------------------------------------------------------------- sweep engine
+# Batched candidate-sweep representation: across the candidate scale-out axis
+# only (a_raw, z_raw, r, summary-node attributes) change, so a decision point
+# is ONE candidate-invariant template per remaining component plus small
+# per-candidate delta arrays, evaluated in a single jit (see core/scaling.py
+# and model.sweep_per_component).
+
+SWEEP_KEYS = ("context", "metrics", "metrics_valid", "a_raw", "z_raw", "r",
+              "adj", "mask", "is_summary")
+
+
+@dataclass
+class SweepTemplate:
+    """Candidate-invariant arrays for the K remaining components.
+
+    ``base`` holds the stacked (K, MAX_NODES, ...) arrays of the template
+    graphs (the subset of keys the forward pass reads, ``SWEEP_KEYS``).
+    ``h_onehot[k, n]`` flags the node slot of component k's historical-summary
+    H(k-1) node, whose attributes vary with the candidate scale-out;
+    ``follows_a``/``follows_z`` flag nodes whose start/end scale-out track the
+    builder's ``a``/``z`` arguments; ``r_eq``/``r_neq`` are the per-node time
+    fractions when a == z vs. a != z.
+    """
+    base: Dict[str, np.ndarray]
+    h_onehot: np.ndarray           # (K, MAX_NODES) float32
+    a_follows_a: np.ndarray        # (K, MAX_NODES) bool: a_raw tracks `a`
+    a_follows_z: np.ndarray        # (K, MAX_NODES) bool: a_raw tracks `z`
+    z_follows_a: np.ndarray        # (K, MAX_NODES) bool
+    z_follows_z: np.ndarray        # (K, MAX_NODES) bool
+    r_eq: np.ndarray               # (K, MAX_NODES)
+    r_neq: np.ndarray              # (K, MAX_NODES)
+    comp_ids: List[int] = field(default_factory=list)
+    levels: int = 8                # max DAG depth -> propagation rounds
+
+    @property
+    def n_components(self) -> int:
+        return self.base["mask"].shape[0]
+
+
+def propagation_depth(adj: np.ndarray, mask: np.ndarray) -> int:
+    """Longest predecessor chain (in edges) of a padded DAG.
+
+    Level-synchronous metric propagation reaches its fixed point after this
+    many rounds, so the sweep can run exactly `depth` levels instead of the
+    MAX_LEVELS worst case without changing a single bit of the result.
+    """
+    a = adj & mask[None, :] & mask[:, None]
+    d = np.zeros(a.shape[0], np.int64)
+    for _ in range(a.shape[0]):
+        nd = np.where(a.any(axis=1), (a * (d[None, :] + 1)).max(axis=1), 0)
+        if (nd == d).all():
+            break
+        d = nd
+    return int(d.max())
+
+
+def empty_graph(max_nodes: int = MAX_NODES) -> ComponentGraph:
+    """Cached all-masked padding graph (bucketing filler)."""
+    g = _EMPTY_GRAPHS.get(max_nodes)
+    if g is None:
+        g = build_graph([], [], max_nodes=max_nodes)
+        _EMPTY_GRAPHS[max_nodes] = g
+    return g
+
+
+_EMPTY_GRAPHS: Dict[int, ComponentGraph] = {}
+
+
+def historical_summaries_batch(candidates: Sequence[NodeAttrs],
+                               targets: np.ndarray, beta: int = BETA
+                               ) -> Dict[str, np.ndarray]:
+    """Vectorized :func:`historical_summary` over a vector of target
+    scale-outs.  Returns per-target H-node attribute arrays::
+
+        context (C, CTX_DIM), metrics (C, N_METRICS), metrics_valid (C,),
+        start (C,), end (C,)
+
+    Matches the scalar path exactly: stable argsort on |end - target| mirrors
+    the stable ``sorted`` ranking, means are taken over the beta chosen.
+    """
+    targets = np.asarray(targets, np.float32)
+    ends = np.array([a.end_scaleout for a in candidates], np.float32)
+    starts = np.array([a.start_scaleout for a in candidates], np.float32)
+    ctxs = np.stack([a.context for a in candidates]).astype(np.float32)
+    mets = np.stack([np.zeros(N_METRICS, np.float32) if a.metrics is None
+                     else np.asarray(a.metrics, np.float32)
+                     for a in candidates])
+    mval = np.array([a.metrics is not None for a in candidates])
+    d = np.abs(ends[None, :] - targets[:, None])           # (C, n_hist)
+    idx = np.argsort(d, axis=1, kind="stable")[:, :beta]   # (C, chosen)
+    chosen_valid = mval[idx]                               # (C, chosen)
+    n_valid = chosen_valid.sum(axis=1)
+    met_sum = (mets[idx] * chosen_valid[..., None]).sum(axis=1)
+    metrics = met_sum / np.maximum(n_valid, 1)[:, None]
+    return {"context": ctxs[idx].mean(axis=1),
+            "metrics": metrics.astype(np.float32),
+            "metrics_valid": n_valid > 0,
+            "start": starts[idx].mean(axis=1),
+            "end": ends[idx].mean(axis=1)}
+
+
+def materialize_candidate(template: SweepTemplate,
+                          deltas: Dict[str, np.ndarray],
+                          c: int) -> Dict[str, np.ndarray]:
+    """Apply candidate ``c``'s deltas host-side -> stacked (K, N, ...) dict.
+
+    Reference path for testing/benchmarking the batched sweep: the result is
+    exactly the graph batch the jit-side assembly produces for candidate c.
+    """
+    oh = template.h_onehot[..., None]                       # (K, N, 1)
+    out = {k: v.copy() for k, v in template.base.items()}
+    out["context"] = (out["context"] * (1.0 - oh) +
+                      oh * deltas["h_context"][c][:, None, :])
+    out["metrics"] = (out["metrics"] * (1.0 - oh) +
+                      oh * deltas["h_metrics"][c][:, None, :])
+    out["metrics_valid"] = deltas["metrics_valid"][c].astype(bool)
+    out["a_raw"] = deltas["a_raw"][c]
+    out["z_raw"] = deltas["z_raw"][c]
+    out["r"] = deltas["r"][c]
+    return out
+
+
 def summary_node(nodes: Sequence[NodeAttrs], name: str,
                  is_historical: bool = False) -> NodeAttrs:
     """P(k): mean context/metrics + component start/end scale-out (§III-D)."""

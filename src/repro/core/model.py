@@ -13,10 +13,24 @@ Metric propagation runs level-synchronously (fori over MAX_NODES levels) so
 predictions flow to nodes whose real metrics are unobserved (future
 iterations), exactly the paper's online-inference mode.  ~5k parameters —
 "allows for training even using a CPU" (§IV-C).
+
+Two inference entry points share the math:
+
+* ``forward`` / ``forward_batch`` — the original per-graph path (training
+  always differentiates through this inline-jnp path).
+* ``forward_stacked`` — batched inference over stacked (B, N, ...) arrays.
+  With the graph-prop kernel flag enabled (``ENEL_GRAPH_PROP_KERNEL=1`` or
+  :func:`set_graph_prop_kernel`), eqs. 6-7 run as one fused Pallas kernel
+  (``repro.kernels.graph_prop``); otherwise it is ``vmap(forward)``.
+* ``sweep_per_component`` — the batched candidate-sweep decision path: one
+  candidate-invariant template + per-candidate deltas, assembled and
+  evaluated inside a single jit (used by ``EnelScaler.recommend``).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+import functools
+import os
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +41,21 @@ HIDDEN = 32
 EDGE_DIM = 16
 X_DIM = 3 + CTX_DIM + 3          # a_vec ‖ c ‖ z_vec
 MAX_LEVELS = 8                   # longest DAG chain the propagation supports
+
+# --------------------------------------------------------------- kernel flag
+_USE_GRAPH_PROP_KERNEL = os.environ.get(
+    "ENEL_GRAPH_PROP_KERNEL", "0").lower() in ("1", "true", "yes")
+
+
+def set_graph_prop_kernel(enabled: bool) -> None:
+    """Route batched inference (forward_stacked / sweep) through the fused
+    Pallas graph-propagation kernel instead of inline jnp."""
+    global _USE_GRAPH_PROP_KERNEL
+    _USE_GRAPH_PROP_KERNEL = bool(enabled)
+
+
+def graph_prop_kernel_enabled(override: Optional[bool] = None) -> bool:
+    return _USE_GRAPH_PROP_KERNEL if override is None else bool(override)
 
 
 def _mlp_init(key, dims):
@@ -68,6 +97,15 @@ def scaleout_vec(s: jax.Array) -> jax.Array:
     return jnp.stack([1.0 - 1.0 / s, jnp.log(s), s], axis=-1)
 
 
+def _prelude(g: Dict) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Shared input lift; works on single (N, ...) and stacked (B, N, ...)."""
+    a_vec = scaleout_vec(g["a_raw"])
+    z_vec = scaleout_vec(g["z_raw"])
+    x = jnp.concatenate([a_vec, g["context"], z_vec], axis=-1)
+    adj = g["adj"] & g["mask"][..., None, :] & g["mask"][..., :, None]
+    return a_vec, z_vec, x, adj
+
+
 def _edge_hidden(params, x):
     """f3 on all (i, j) pairs -> (N, N, EDGE_DIM); i = dst, j = src."""
     n = x.shape[0]
@@ -87,33 +125,38 @@ def edge_weights(params, x, adj) -> Tuple[jax.Array, jax.Array]:
     return jnp.where(has_pred, e, 0.0), h3
 
 
-def forward(params: Dict, g: Dict) -> Dict[str, jax.Array]:
-    """Full propagation over one padded graph (dict of (N,...) arrays).
+def _propagate(params, x, adj, m_obs, valid,
+               levels: int = MAX_LEVELS) -> Tuple[jax.Array, jax.Array]:
+    """eqs. 6-7 for ONE graph: edge weights + level-synchronous metric
+    propagation (observed metrics are fixed inputs; unobserved nodes adopt
+    propagated estimates as they stabilize).  Returns (e, m_hat).
 
-    Returns overhead/runtime/accumulated-runtime/propagated-metric predictions.
+    f4's first layer is split so the level-invariant h3 @ W_h half runs once
+    outside the loop; per level only the (N, M) @ W_m half is recomputed.
+    ``levels`` may be lowered to the graph's actual DAG depth — propagation
+    reaches a fixed point after `depth` rounds, so fewer rounds are exact.
     """
-    a_vec = scaleout_vec(g["a_raw"])
-    z_vec = scaleout_vec(g["z_raw"])
-    x = jnp.concatenate([a_vec, g["context"], z_vec], axis=-1)
-    adj = g["adj"] & g["mask"][None, :] & g["mask"][:, None]
     e, h3 = edge_weights(params, x, adj)
-
-    # eq.7 metric propagation, level-synchronous: observed metrics are fixed
-    # inputs; unobserved nodes adopt propagated estimates as they stabilize.
-    m_obs = g["metrics"]
-    valid = g["metrics_valid"]
+    w0, b0 = params["f4"][0]["w"], params["f4"][0]["b"]
+    pre_h = h3 @ w0[:EDGE_DIM]                               # (N, N, HIDDEN)
+    w_m = w0[EDGE_DIM:]
+    f4_tail = params["f4"][1:]
 
     def level_step(_, m_cur):
         mj = jnp.where(valid[:, None], m_obs, m_cur)            # (N, M)
-        f4_in = jnp.concatenate(
-            [h3, jnp.broadcast_to(mj[None, :, :], h3.shape[:2] + (N_METRICS,))],
-            axis=-1)
-        msg = _mlp(params["f4"], f4_in)                          # (N,N,M)
+        hidden = jax.nn.leaky_relu(pre_h + (mj @ w_m)[None, :, :] + b0, 0.1)
+        msg = _mlp(f4_tail, hidden)                              # (N,N,M)
         m_prop = jnp.einsum("ij,ijm->im", e, msg)
         return jnp.where(valid[:, None], m_obs, m_prop)
 
-    m_hat = jax.lax.fori_loop(0, MAX_LEVELS, level_step, m_obs)
-    m_used = jnp.where(valid[:, None], m_obs, m_hat)
+    m_hat = jax.lax.fori_loop(0, levels, level_step, m_obs)
+    return e, m_hat
+
+
+def _readout(params, g, a_vec, z_vec, adj, e, m_hat) -> Dict[str, jax.Array]:
+    """eqs. 3-5 for ONE graph given propagated metrics and edge weights."""
+    valid = g["metrics_valid"]
+    m_used = jnp.where(valid[:, None], g["metrics"], m_hat)
 
     # eq.3 overhead
     f1_in = jnp.concatenate([g["context"], m_used, a_vec, z_vec,
@@ -142,9 +185,97 @@ def forward(params: Dict, g: Dict) -> Dict[str, jax.Array]:
             "total_runtime": jnp.max(tt_hat)}
 
 
+def forward(params: Dict, g: Dict,
+            levels: int = MAX_LEVELS) -> Dict[str, jax.Array]:
+    """Full propagation over one padded graph (dict of (N,...) arrays).
+
+    Returns overhead/runtime/accumulated-runtime/propagated-metric predictions.
+    """
+    a_vec, z_vec, x, adj = _prelude(g)
+    e, m_hat = _propagate(params, x, adj, g["metrics"], g["metrics_valid"],
+                          levels)
+    return _readout(params, g, a_vec, z_vec, adj, e, m_hat)
+
+
 forward_batch = jax.vmap(forward, in_axes=(None, 0))
 
 
-def predict_total_runtime(params: Dict, graphs: Dict) -> jax.Array:
+def forward_stacked(params: Dict, batch: Dict,
+                    use_kernel: Optional[bool] = None,
+                    levels: int = MAX_LEVELS) -> Dict[str, jax.Array]:
+    """Batched inference over stacked (B, N, ...) graph arrays.
+
+    Dispatches eqs. 6-7 to the fused Pallas ``graph_prop`` kernel when the
+    flag is on (resolved at trace time — callers that jit must pass the
+    resolved flag as a static argument), else falls back to vmap(forward).
+    """
+    if not graph_prop_kernel_enabled(use_kernel):
+        if levels == MAX_LEVELS:
+            return forward_batch(params, batch)
+        return jax.vmap(lambda p, g: forward(p, g, levels),
+                        in_axes=(None, 0))(params, batch)
+    from repro.kernels.graph_prop.ops import graph_prop
+    a_vec, z_vec, x, adj = _prelude(batch)
+    e, m_hat = graph_prop(params, x, adj, batch["metrics"],
+                          batch["metrics_valid"], levels=levels)
+    return jax.vmap(_readout, in_axes=(None, 0, 0, 0, 0, 0, 0))(
+        params, batch, a_vec, z_vec, adj, e, m_hat)
+
+
+def predict_total_runtime(params: Dict, graphs: Dict,
+                          use_kernel: Optional[bool] = None) -> jax.Array:
     """Total predicted runtime per component graph in a stacked batch."""
-    return forward_batch(params, graphs)["total_runtime"]
+    return forward_stacked(params, graphs, use_kernel)["total_runtime"]
+
+
+# ------------------------------------------------------- candidate sweep jit
+def _sweep_impl(params, base, h_onehot, deltas, use_kernel, levels):
+    """Assemble all (candidate x component) graphs from template + deltas on
+    device and evaluate them in one fused batch.  Shapes:
+
+      base[...]           (K, N, ...)   candidate-invariant template
+      h_onehot            (K, N)        H-summary slot indicator
+      deltas["a_raw"|"z_raw"|"r"|"metrics_valid"]   (C, K, N)
+      deltas["h_context"] (C, K, CTX)   per-candidate H-node context
+      deltas["h_metrics"] (C, K, M)     per-candidate H-node metrics
+
+    Returns per-component totals (C, K).
+    """
+    c, k = deltas["a_raw"].shape[:2]
+    n = base["mask"].shape[-1]
+    oh = h_onehot[None, :, :, None]                         # (1, K, N, 1)
+    ctx = (base["context"][None] * (1.0 - oh) +
+           oh * deltas["h_context"][:, :, None, :])
+    met = (base["metrics"][None] * (1.0 - oh) +
+           oh * deltas["h_metrics"][:, :, None, :])
+    batch = {
+        "context": ctx, "metrics": met,
+        "metrics_valid": deltas["metrics_valid"],
+        "a_raw": deltas["a_raw"], "z_raw": deltas["z_raw"],
+        "r": deltas["r"],
+        "adj": jnp.broadcast_to(base["adj"][None], (c, k, n, n)),
+        "mask": jnp.broadcast_to(base["mask"][None], (c, k, n)),
+        "is_summary": jnp.broadcast_to(base["is_summary"][None], (c, k, n)),
+    }
+    flat = {key: v.reshape((c * k,) + v.shape[2:]) for key, v in batch.items()}
+    total = forward_stacked(params, flat, use_kernel=use_kernel, levels=levels)
+    return total["total_runtime"].reshape(c, k)
+
+
+_sweep_jit = jax.jit(_sweep_impl, static_argnums=(4, 5))
+# deltas are rebuilt host-side every decision -> safe to donate off-CPU
+_sweep_jit_donated = jax.jit(_sweep_impl, static_argnums=(4, 5),
+                             donate_argnums=(3,))
+
+
+@functools.lru_cache(maxsize=1)
+def _sweep_fn():
+    return _sweep_jit if jax.default_backend() == "cpu" else _sweep_jit_donated
+
+
+def sweep_per_component(params: Dict, base: Dict, h_onehot, deltas,
+                        use_kernel: Optional[bool] = None,
+                        levels: int = MAX_LEVELS) -> jax.Array:
+    """Jitted batched candidate sweep -> per-component totals (C, K)."""
+    return _sweep_fn()(params, base, h_onehot, deltas,
+                       graph_prop_kernel_enabled(use_kernel), levels)

@@ -6,6 +6,25 @@ static component characteristics (a graph_builder supplied by the job layer),
 attach P/H summary nodes, run propagation for EVERY candidate scale-out in
 the valid range, and pick the configuration that best complies with the
 runtime target (smallest scale-out among the feasible; else the argmin).
+
+The default :meth:`EnelScaler.recommend` is the *batched candidate-sweep*
+engine: the graph builder is probed twice per remaining component to derive
+ONE candidate-invariant template (context, metrics, adjacency, masks) plus
+per-candidate delta arrays (a_raw, z_raw, r, H-summary attributes), and the
+full candidate axis is evaluated inside a single jit
+(:func:`repro.core.model.sweep_per_component`).  The original
+per-candidate-graph implementation is kept as :meth:`recommend_pergraph`
+for benchmarking and as a numerical reference.
+
+Builder contract for the batched path: ``a``/``z`` may flow *unchanged* into
+node start/end scale-outs (identity only — derived values like (a+z)/2 keep
+the template's base value), and time fractions may depend on ``a``/``z``
+only through the predicate ``a == z``.  Node contexts are treated as
+candidate-invariant: the template is built once at the current scale-out, so
+a builder that derives context from ``z`` (e.g. task counts) is evaluated
+with the current-scale-out context for every candidate — a deliberate
+modeling choice of this engine; use :meth:`EnelScaler.recommend_pergraph`
+when exact per-candidate contexts are required.
 """
 from __future__ import annotations
 
@@ -15,13 +34,22 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.bell import BellModel, initial_scaleout
-from repro.core.graph import (ComponentGraph, NodeAttrs, historical_summary,
-                              summary_node)
+from repro.core.graph import (CTX_DIM, N_METRICS, ComponentGraph, NodeAttrs,
+                              SWEEP_KEYS, SweepTemplate,
+                              historical_summaries_batch, historical_summary,
+                              propagation_depth, summary_node)
 from repro.core.training import EnelTrainer
 
 # graph_builder(comp_idx, a, z, predecessors) -> ComponentGraph with
 # unobserved metrics/runtimes; predecessors = list of summary NodeAttrs.
 GraphBuilder = Callable[[int, float, float, List[NodeAttrs]], ComponentGraph]
+
+# Probe scale-outs used to classify which node slots track the builder's
+# a/z arguments.  Exactly representable in float32 and far outside any real
+# scale-out range, so equality against the built arrays is unambiguous.
+A_PROBE = 1.0e5
+Z_PROBE = 2.0e5
+H_SLOT = "__H__"          # placeholder name marking the H-summary node slot
 
 
 class EnelScaler:
@@ -35,6 +63,9 @@ class EnelScaler:
         self.hist_summaries: Dict[int, List[NodeAttrs]] = defaultdict(list)
         # first-component (scaleout, runtime) pairs for Bell initial alloc
         self.first_component_history: List[Tuple[float, float]] = []
+        # last sweep diagnostics: candidates list + (C, K) per-component preds
+        self.last_candidates: List[int] = []
+        self.last_per_component: Optional[np.ndarray] = None
 
     # --------------------------------------------------------------- history
     def record_component(self, comp_idx: int, nodes: Sequence[NodeAttrs],
@@ -56,17 +87,129 @@ class EnelScaler:
         return initial_scaleout(self.first_component_history,
                                 per_comp_target, (lo, hi))
 
+    # ------------------------------------------------------------ candidates
+    def candidate_scaleouts(self, current_scaleout: int) -> List[int]:
+        lo, hi = self.range
+        candidates = sorted(set(range(lo, hi + 1, self.candidate_stride))
+                            | {hi, current_scaleout})
+        return [s for s in candidates if lo <= s <= hi]
+
+    # ---------------------------------------------------------- sweep builder
+    def build_sweep(self, *, graph_builder: GraphBuilder, next_comp: int,
+                    n_components: int, current_scaleout: int,
+                    candidates: Sequence[int],
+                    current_summary: Optional[NodeAttrs] = None
+                    ) -> Tuple[SweepTemplate, Dict[str, np.ndarray]]:
+        """Probe the builder twice per remaining component and assemble the
+        candidate-invariant template plus the per-candidate delta arrays."""
+        remaining = list(range(next_comp, n_components))
+        cand = np.array(candidates, np.float32)
+        n_cand, n_rem = len(candidates), len(remaining)
+        s_now = float(current_scaleout)
+
+        base_graphs: List[ComponentGraph] = []
+        probe_graphs: List[ComponentGraph] = []
+        hists: Dict[int, List[NodeAttrs]] = {}
+        for k in remaining:
+            preds: List[NodeAttrs] = []
+            if k == next_comp and current_summary is not None:
+                preds.append(current_summary)        # P of the just-finished comp
+            hist = self.hist_summaries.get(k - 1, []) if k > 0 else []
+            if hist:
+                # placeholder H(k-1) slot; attributes are per-candidate deltas
+                preds.append(NodeAttrs(
+                    name=H_SLOT, context=np.zeros(CTX_DIM, np.float32),
+                    metrics=np.zeros(N_METRICS, np.float32),
+                    start_scaleout=1.0, end_scaleout=1.0, is_summary=True))
+                hists[k] = hist
+            base_graphs.append(graph_builder(k, s_now, s_now, list(preds)))
+            probe_graphs.append(graph_builder(k, A_PROBE, Z_PROBE, list(preds)))
+
+        base = {key: np.stack([getattr(g, key) for g in base_graphs])
+                for key in SWEEP_KEYS}
+        max_nodes = base["mask"].shape[1]
+        h_onehot = np.zeros((n_rem, max_nodes), np.float32)
+        for ki, g in enumerate(base_graphs):
+            if remaining[ki] in hists:
+                if H_SLOT in g.names:
+                    h_onehot[ki, g.names.index(H_SLOT)] = 1.0
+                else:                    # builder dropped the pred: no H delta
+                    del hists[remaining[ki]]
+        pa = np.stack([g.a_raw for g in probe_graphs])
+        pz = np.stack([g.z_raw for g in probe_graphs])
+        template = SweepTemplate(
+            base=base, h_onehot=h_onehot,
+            a_follows_a=pa == A_PROBE, a_follows_z=pa == Z_PROBE,
+            z_follows_a=pz == A_PROBE, z_follows_z=pz == Z_PROBE,
+            r_eq=base["r"].copy(),
+            r_neq=np.stack([g.r for g in probe_graphs]),
+            comp_ids=remaining,
+            levels=max(propagation_depth(g.adj, g.mask)
+                       for g in base_graphs) or 1)
+
+        # per-candidate builder arguments (paper: the component about to start
+        # rescales from the current allocation; later ones run at z == s)
+        z_sel = np.broadcast_to(cand[:, None], (n_cand, n_rem))    # (C, K)
+        a_sel = np.where(np.array(remaining)[None, :] == next_comp,
+                         s_now, z_sel)
+        a3, z3 = a_sel[:, :, None], z_sel[:, :, None]
+        a_raw = np.where(template.a_follows_a[None], a3,
+                         np.where(template.a_follows_z[None], z3,
+                                  base["a_raw"][None]))
+        z_raw = np.where(template.z_follows_a[None], a3,
+                         np.where(template.z_follows_z[None], z3,
+                                  base["z_raw"][None]))
+        r = np.where((a_sel == z_sel)[:, :, None],
+                     template.r_eq[None], template.r_neq[None])
+        metrics_valid = np.broadcast_to(
+            base["metrics_valid"][None], (n_cand, n_rem, max_nodes)).copy()
+        h_context = np.zeros((n_cand, n_rem, CTX_DIM), np.float32)
+        h_metrics = np.zeros((n_cand, n_rem, N_METRICS), np.float32)
+        for ki, k in enumerate(remaining):
+            if k not in hists:
+                continue
+            h = historical_summaries_batch(hists[k], cand, beta=self.beta)
+            slot = int(np.argmax(h_onehot[ki]))
+            h_context[:, ki] = h["context"]
+            h_metrics[:, ki] = h["metrics"]
+            metrics_valid[:, ki, slot] = h["metrics_valid"]
+            a_raw[:, ki, slot] = np.maximum(h["start"], 1e-6)
+            z_raw[:, ki, slot] = np.maximum(h["end"], 1e-6)
+        deltas = {"a_raw": a_raw.astype(np.float32),
+                  "z_raw": z_raw.astype(np.float32),
+                  "r": r.astype(np.float32),
+                  "metrics_valid": metrics_valid,
+                  "h_context": h_context, "h_metrics": h_metrics}
+        return template, deltas
+
     # ------------------------------------------------------------- recommend
     def recommend(self, *, graph_builder: GraphBuilder, next_comp: int,
                   n_components: int, elapsed: float, current_scaleout: int,
                   target_runtime: float,
                   current_summary: Optional[NodeAttrs] = None
                   ) -> Tuple[int, float, Dict[int, float]]:
-        """Returns (scaleout, predicted_total, per-candidate totals)."""
-        lo, hi = self.range
-        candidates = sorted(set(range(lo, hi + 1, self.candidate_stride))
-                            | {hi, current_scaleout})
-        candidates = [s for s in candidates if lo <= s <= hi]
+        """Batched sweep: returns (scaleout, predicted_total, per-cand totals)."""
+        candidates = self.candidate_scaleouts(current_scaleout)
+        if next_comp >= n_components:
+            return current_scaleout, elapsed, {}
+        template, deltas = self.build_sweep(
+            graph_builder=graph_builder, next_comp=next_comp,
+            n_components=n_components, current_scaleout=current_scaleout,
+            candidates=candidates, current_summary=current_summary)
+        per_comp = self.trainer.predict_sweep(template, deltas)    # (C, K)
+        self.last_candidates = list(candidates)
+        self.last_per_component = per_comp
+        totals = {s: elapsed + float(per_comp[i].sum())
+                  for i, s in enumerate(candidates)}
+        return self._pick(candidates, totals, target_runtime)
+
+    def recommend_pergraph(self, *, graph_builder: GraphBuilder,
+                           next_comp: int, n_components: int, elapsed: float,
+                           current_scaleout: int, target_runtime: float,
+                           current_summary: Optional[NodeAttrs] = None
+                           ) -> Tuple[int, float, Dict[int, float]]:
+        """Original per-candidate graph-construction path (reference/bench)."""
+        candidates = self.candidate_scaleouts(current_scaleout)
         totals: Dict[int, float] = {}
         remaining_idx = list(range(next_comp, n_components))
         if not remaining_idx:
@@ -79,7 +222,7 @@ class EnelScaler:
                 # P(k-1)/H(k-1) are predecessors of G(k)'s roots (paper Fig.3)
                 preds: List[NodeAttrs] = []
                 if k == next_comp and current_summary is not None:
-                    preds.append(current_summary)        # P of the just-finished comp
+                    preds.append(current_summary)    # P of the just-finished comp
                 if k > 0:
                     h = historical_summary(self.hist_summaries.get(k - 1, []),
                                            float(s), beta=self.beta)
@@ -91,7 +234,11 @@ class EnelScaler:
             len(candidates), len(remaining_idx))
         for i, s in enumerate(candidates):
             totals[s] = elapsed + float(per_comp[i].sum())
+        return self._pick(candidates, totals, target_runtime)
 
+    @staticmethod
+    def _pick(candidates: Sequence[int], totals: Dict[int, float],
+              target_runtime: float) -> Tuple[int, float, Dict[int, float]]:
         feasible = [s for s in candidates if totals[s] <= target_runtime]
         if feasible:
             best = min(feasible)                 # cheapest compliant scale-out

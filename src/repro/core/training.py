@@ -64,8 +64,7 @@ def _adam_update(params, opt, batch, lr):
 _adam_step = jax.jit(_adam_update)
 
 
-@functools.partial(jax.jit, static_argnums=3)
-def _adam_run(params, opt, batch, steps, lr):
+def _adam_run_impl(params, opt, batch, steps, lr):
     """`steps` Adam updates fused into one jit (dispatch-bound otherwise)."""
     def body(carry, _):
         p, o = carry
@@ -75,6 +74,26 @@ def _adam_run(params, opt, batch, steps, lr):
     (params, opt), losses = jax.lax.scan(body, (params, opt), None,
                                          length=steps)
     return params, opt, losses[-1]
+
+
+_adam_run = jax.jit(_adam_run_impl, static_argnums=3)
+# params/opt are replaced by the returned pytrees every call -> donating their
+# buffers avoids a copy per fit; donation is a no-op (warning) on CPU, so the
+# donated variant is only selected off-CPU.
+_adam_run_donated = jax.jit(_adam_run_impl, static_argnums=3,
+                            donate_argnums=(0, 1))
+
+
+@functools.lru_cache(maxsize=1)
+def _adam_run_fn():
+    return _adam_run if jax.default_backend() == "cpu" else _adam_run_donated
+
+
+def _pow2_bucket(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
 
 
 class EnelTrainer:
@@ -114,12 +133,9 @@ class EnelTrainer:
         graphs = list(graphs)
         # bucket the batch to a power of two with empty (all-masked) graphs so
         # jit caches a handful of shapes instead of one per history length
-        from repro.core.graph import build_graph
+        from repro.core.graph import empty_graph
         n = len(graphs)
-        bucket = 1
-        while bucket < n:
-            bucket *= 2
-        graphs = graphs + [build_graph([], [])] * (bucket - n)
+        graphs = graphs + [empty_graph()] * (_pow2_bucket(n) - n)
         stacked = stack_graphs(graphs)
         if metric_dropout > 0:
             rng = np.random.RandomState(self.seed + self.runs_seen)
@@ -133,7 +149,7 @@ class EnelTrainer:
         # round steps to the nearest power of two (jit cache friendliness)
         p2 = 1 << max(0, (max(steps, 1)).bit_length() - 1)
         steps = max(8, min(512, p2 if steps - p2 < p2 else p2 * 2))
-        self.params, self.opt, loss = _adam_run(
+        self.params, self.opt, loss = _adam_run_fn()(
             self.params, self.opt, batch, steps, self.lr)
         self.last_fit_seconds = time.time() - t0
         return float(loss)
@@ -153,12 +169,35 @@ class EnelTrainer:
 
     def predict(self, graphs: Sequence[ComponentGraph]) -> np.ndarray:
         """Per-component total-runtime predictions (seconds)."""
-        from repro.core.graph import build_graph
+        from repro.core.graph import empty_graph
         n = len(graphs)
-        bucket = 1
-        while bucket < n:
-            bucket *= 2
-        padded = list(graphs) + [build_graph([], [])] * (bucket - n)
+        padded = list(graphs) + [empty_graph()] * (_pow2_bucket(n) - n)
         batch = {k: jnp.asarray(v) for k, v in stack_graphs(padded).items()}
         return np.asarray(
             enel_model.predict_total_runtime(self.params, batch))[:n]
+
+    def predict_stacked(self, batch: Dict[str, np.ndarray]) -> np.ndarray:
+        """Totals for an already-stacked (B, N, ...) graph-array dict."""
+        dev = {k: jnp.asarray(v) for k, v in batch.items()}
+        return np.asarray(enel_model.predict_total_runtime(self.params, dev))
+
+    def predict_sweep(self, template, deltas: Dict[str, np.ndarray],
+                      use_kernel: bool = None) -> np.ndarray:
+        """Batched candidate-sweep predictions -> (C, K) seconds.
+
+        One device transfer + one jit call per decision: the template's
+        (K, N, ...) base arrays and the small (C, K, ...) delta arrays are
+        shipped as-is (exact shapes — the per-job trace count is bounded by
+        the component count x the 2 possible candidate-set sizes) and
+        evaluated via :func:`repro.core.model.sweep_per_component` with the
+        propagation depth lowered to the template DAG's actual depth.
+        """
+        n_cand, n_rem = deltas["a_raw"].shape[:2]
+        levels = min(enel_model.MAX_LEVELS, max(1, template.levels))
+        per = enel_model.sweep_per_component(
+            self.params,
+            {k: jnp.asarray(v) for k, v in template.base.items()},
+            jnp.asarray(template.h_onehot),
+            {k: jnp.asarray(np.asarray(v)) for k, v in deltas.items()},
+            use_kernel=use_kernel, levels=levels)
+        return np.asarray(per)[:n_cand, :n_rem]

@@ -40,10 +40,16 @@ class RunStats:
     n_failures: int = 0
     fit_seconds: float = 0.0
     decide_seconds: float = 0.0
+    decide_calls: int = 0
 
     @property
     def cvc(self) -> int:
         return int(self.violation > 0)
+
+    @property
+    def decide_seconds_per_call(self) -> float:
+        return self.decide_seconds / self.decide_calls if self.decide_calls \
+            else 0.0
 
 
 def _component_nodes(encoder: ContextEncoder, job: JobSpec,
@@ -107,7 +113,7 @@ class JobExperiment:
     # ------------------------------------------------------------ execution
     def _execute(self, *, scaler: Optional[str], inject_failures: bool,
                  initial_s: int) -> Tuple[RunRecord, List[ComponentGraph],
-                                          List[int], float]:
+                                          List[int], float, int]:
         job = self.job
         run = RunRecord(job.name, self.target or 0.0)
         clock = 0.0
@@ -116,6 +122,7 @@ class JobExperiment:
         run_graphs: List[ComponentGraph] = []
         prev_summary: Optional[NodeAttrs] = None
         decide_s = 0.0
+        decide_n = 0
         for k in range(job.n_components):
             comp = self.sim.run_component(
                 job, k, clock=clock, start_scaleout=s_prev, end_scaleout=s,
@@ -140,6 +147,11 @@ class JobExperiment:
                     k % self.decision_interval == 0:
                 t0 = time.time()
                 if scaler == "enel":
+                    # batched candidate sweep: template + deltas, one jit
+                    # call.  NOTE: under this engine node contexts are built
+                    # once at the CURRENT scale-out (the z -> n_tasks context
+                    # dependence below is frozen across candidates); only
+                    # a/z/r and H-summary attrs vary per candidate.
                     builder = lambda ci, a, z, pr: _to_graph(
                         _future_nodes(self.encoder, job, ci, a, z), pr, ci)
                     s_new, _, _ = self.enel.recommend(
@@ -153,17 +165,18 @@ class JobExperiment:
                         elapsed=clock, current_scaleout=s,
                         target_runtime=self.target)
                 decide_s += time.time() - t0
+                decide_n += 1
                 if s_new != s:
                     run.rescales.append((k + 1, s, s_new))
                     s = s_new
                     scaleouts.append(s)
-        return run, run_graphs, scaleouts, decide_s
+        return run, run_graphs, scaleouts, decide_s, decide_n
 
     # ------------------------------------------------------------ profiling
     def profile(self, n_runs: int = 10) -> None:
         for i in range(n_runs):
             s = PROFILING_SCALEOUTS[i % len(PROFILING_SCALEOUTS)]
-            run, graphs, scaleouts, _ = self._execute(
+            run, graphs, scaleouts, _, _ = self._execute(
                 scaler=None, inject_failures=False, initial_s=s)
             self.graph_history.extend(graphs)
             self._run_idx += 1
@@ -190,7 +203,7 @@ class JobExperiment:
         s0, predicted = self.ellis.recommend(
             next_comp=0, n_components=job.n_components, elapsed=0.0,
             current_scaleout=SCALEOUT_RANGE[0], target_runtime=self.target)
-        run, graphs, scaleouts, decide_s = self._execute(
+        run, graphs, scaleouts, decide_s, decide_n = self._execute(
             scaler=method, inject_failures=inject_failures, initial_s=s0)
         self.graph_history.extend(graphs)
         self._run_idx += 1
@@ -206,7 +219,8 @@ class JobExperiment:
         st = RunStats(self._run_idx, method, run.runtime, self.target,
                       run.violation, predicted=predicted,
                       scaleouts=scaleouts, n_failures=len(run.failures),
-                      fit_seconds=fit_s, decide_seconds=decide_s)
+                      fit_seconds=fit_s, decide_seconds=decide_s,
+                      decide_calls=decide_n)
         self.stats.append(st)
         return st
 

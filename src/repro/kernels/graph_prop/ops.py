@@ -1,0 +1,56 @@
+"""Jit-friendly wrapper: Enel param pytree + bool masks -> fused kernel.
+
+Handles batch padding to the graph-block size, dtype/bias-layout massaging
+and the interpret-mode fallback (the CPU backend cannot lower TPU Pallas, so
+off-TPU the kernel runs in interpret mode — same semantics, used by tests).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.graph_prop.kernel import graph_prop_kernel
+
+
+def _row(v: jax.Array) -> jax.Array:
+    return jnp.asarray(v, jnp.float32)[None, :]
+
+
+def graph_prop(params: Dict, x: jax.Array, adj: jax.Array, m_obs: jax.Array,
+               valid: jax.Array, *, levels: int = 8, block_g: int = 8,
+               interpret: Optional[bool] = None
+               ) -> Tuple[jax.Array, jax.Array]:
+    """eqs. 6-7 for a stacked batch of padded graphs.
+
+    params: the Enel pytree (uses "f3", "f4", "attn_a"); x: (B,N,X_DIM);
+    adj: (B,N,N) bool (already mask-ANDed); m_obs: (B,N,M); valid: (B,N)
+    bool.  Returns (e (B,N,N) f32, m_hat (B,N,M) f32).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b = x.shape[0]
+    gb = min(block_g, b)
+    pad = (-b) % gb
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+        adj = jnp.concatenate(
+            [adj, jnp.zeros((pad,) + adj.shape[1:], adj.dtype)])
+        m_obs = jnp.concatenate(
+            [m_obs, jnp.zeros((pad,) + m_obs.shape[1:], m_obs.dtype)])
+        valid = jnp.concatenate(
+            [valid, jnp.zeros((pad,) + valid.shape[1:], valid.dtype)])
+    f3, f4 = params["f3"], params["f4"]
+    e, m_hat = graph_prop_kernel(
+        jnp.asarray(x, jnp.float32),
+        jnp.asarray(adj, jnp.float32),
+        jnp.asarray(m_obs, jnp.float32),
+        jnp.asarray(valid, jnp.float32),
+        jnp.asarray(f3[0]["w"], jnp.float32), _row(f3[0]["b"]),
+        jnp.asarray(f3[1]["w"], jnp.float32), _row(f3[1]["b"]),
+        _row(params["attn_a"]),
+        jnp.asarray(f4[0]["w"], jnp.float32), _row(f4[0]["b"]),
+        jnp.asarray(f4[1]["w"], jnp.float32), _row(f4[1]["b"]),
+        levels=levels, block_g=gb, interpret=interpret)
+    return e[:b], m_hat[:b]

@@ -1,0 +1,56 @@
+"""Pure-numpy oracle for the fused graph-propagation kernel (eqs. 6-7).
+
+Defines the semantics the Pallas kernel must reproduce: the dense N x N f3
+edge MLP, the predecessor-masked softmax, and ``levels`` rounds of
+level-synchronous f4 metric message passing with observed metrics pinned.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+def _leaky(x: np.ndarray, slope: float = 0.1) -> np.ndarray:
+    return np.where(x > 0, x, slope * x)
+
+
+def _mlp_np(layers, x: np.ndarray) -> np.ndarray:
+    for li, l in enumerate(layers):
+        x = x @ np.asarray(l["w"], np.float32) + np.asarray(l["b"], np.float32)
+        if li < len(layers) - 1:
+            x = _leaky(x)
+    return x
+
+
+def graph_prop_ref(params: Dict, x: np.ndarray, adj: np.ndarray,
+                   m_obs: np.ndarray, valid: np.ndarray,
+                   levels: int = 8) -> Tuple[np.ndarray, np.ndarray]:
+    """x: (B,N,XD); adj: (B,N,N) bool, adj[b,i,j]: j -> i; m_obs: (B,N,M);
+    valid: (B,N) bool.  Returns (e (B,N,N), m_hat (B,N,M))."""
+    x = np.asarray(x, np.float32)
+    adj = np.asarray(adj, bool)
+    m_obs = np.asarray(m_obs, np.float32)
+    valid = np.asarray(valid, bool)
+    b, n, _ = x.shape
+    m = m_obs.shape[-1]
+
+    xi = np.broadcast_to(x[:, :, None, :], (b, n, n, x.shape[-1]))
+    xj = np.broadcast_to(x[:, None, :, :], (b, n, n, x.shape[-1]))
+    h3 = _mlp_np(params["f3"], np.concatenate([xi, xj], axis=-1))
+    logits = _leaky(h3) @ np.asarray(params["attn_a"], np.float32)
+    logits = np.where(adj, logits, -1e30)
+    mx = logits.max(axis=-1, keepdims=True)
+    ex = np.exp(logits - mx)
+    sm = ex / ex.sum(axis=-1, keepdims=True)
+    e = np.where(adj.any(axis=-1, keepdims=True), sm, 0.0).astype(np.float32)
+
+    m_cur = m_obs
+    for _ in range(levels):
+        mj = np.where(valid[:, :, None], m_obs, m_cur)
+        f4_in = np.concatenate(
+            [h3, np.broadcast_to(mj[:, None, :, :], (b, n, n, m))], axis=-1)
+        msg = _mlp_np(params["f4"], f4_in)
+        m_prop = np.einsum("bij,bijm->bim", e, msg)
+        m_cur = np.where(valid[:, :, None], m_obs, m_prop)
+    return e, m_cur.astype(np.float32)

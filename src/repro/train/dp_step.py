@@ -57,7 +57,8 @@ def make_dp_train_step(cfg: ModelConfig, opt: AdamWConfig, mesh: Mesh,
         return jax.tree_util.tree_map(lambda _: sharded, tree)
 
     def step_fn(state, err_state, batch):
-        fn = jax.shard_map(
+        from repro.train.shard_compat import shard_map
+        fn = shard_map(
             body, mesh=mesh,
             in_specs=(jax.tree_util.tree_map(lambda _: replicated, state),
                       jax.tree_util.tree_map(lambda _: replicated, err_state),
@@ -65,8 +66,7 @@ def make_dp_train_step(cfg: ModelConfig, opt: AdamWConfig, mesh: Mesh,
             out_specs=(jax.tree_util.tree_map(lambda _: replicated, state),
                        jax.tree_util.tree_map(lambda _: replicated,
                                               err_state),
-                       replicated),
-            check_vma=False)
+                       replicated))
         return fn(state, err_state, batch)
 
     def init_extra(params) -> Dict:

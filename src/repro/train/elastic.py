@@ -236,6 +236,12 @@ class ElasticTrainer:
             if comp_idx < ecfg.n_components - 1:
                 self.enel.observe_run(self.graphs, retrain_every=10 ** 9,
                                       steps=0, fine_tune_steps=40)
+                # batched sweep engine: _future_builder's z-dependent context
+                # (encoder.context(stage, int(z))) is evaluated ONCE at the
+                # current dp for every candidate; only a/z/r and H-summary
+                # attrs vary.  Acceptable here because dp_new snaps to the
+                # coarse dp_choices grid below; use recommend_pergraph for
+                # exact per-candidate contexts.
                 dp_new, pred, _ = self.scaler.recommend(
                     graph_builder=self._future_builder,
                     next_comp=comp_idx + 1, n_components=ecfg.n_components,

@@ -1,0 +1,14 @@
+"""shard_map across JAX versions: `jax.shard_map(..., check_vma=)` (new)
+vs `jax.experimental.shard_map.shard_map(..., check_rep=)` (<= 0.4.x)."""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)

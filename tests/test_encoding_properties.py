@@ -1,6 +1,8 @@
 """Hypothesis property tests for the context-encoding layer (eqs. 1-2)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional test dependency")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -2,6 +2,8 @@
 rescale overhead accounting, dataset generators."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional test dependency")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -116,11 +116,13 @@ def test_error_feedback_unbiased_over_steps():
     rng = np.random.RandomState(1)
     mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("data",))
 
+    from repro.train.shard_compat import shard_map
+
     def one_step(g, e):
-        f = jax.shard_map(
+        f = shard_map(
             lambda gg, ee: psum_compressed(gg[0], ee[0], "data"),
             mesh=mesh, in_specs=(P("data"), P("data")),
-            out_specs=(P(), P()), check_vma=False)
+            out_specs=(P(), P()))
         return f(g[None], e[None])
 
     true_acc = np.zeros(64)
