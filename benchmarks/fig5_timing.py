@@ -2,8 +2,11 @@
 job class (GBT decomposes into more components -> more graphs -> longer),
 plus the scale-out *decision* latency: the per-candidate graph-construction
 path (``EnelScaler.recommend_pergraph``) vs. the batched template+delta
-sweep (``EnelScaler.recommend``).  Emits ``BENCH_decision.json`` so the
-decision-latency trajectory is tracked across PRs.
+sweep (``EnelScaler.recommend``), plus the *fit* latency: the legacy
+restack-per-call path (``EnelTrainer.fit``) vs. the device-resident
+ring-buffer fast path (``EnelTrainer.fit_resident``) the runner now uses.
+Emits ``BENCH_decision.json`` so the decision- and fit-latency trajectories
+are tracked across PRs (CI uploads the JSON as an artifact).
 """
 from __future__ import annotations
 
@@ -15,16 +18,25 @@ from typing import Dict
 import numpy as np
 
 from repro.dataflow import JOBS, JobExperiment
+from repro.dataflow.runner import HISTORY_WINDOW
 
 
 def measure(job_key: str, seed: int = 0, repeats: int = 3) -> Dict:
+    """fit here is the runner's actual online path: a resident fine-tune on
+    the newest run's graphs (same content the legacy row restacked).
+
+    Deliberately NO warmup, matching how the historical fig5 rows were
+    taken: the first repeat carries any one-off jit compile (hence std ~=
+    mean when `repeats` is small), keeping fit_s_mean comparable across
+    PRs.  The `fit` rows from :func:`measure_fit` are the steady-state
+    (warmed) comparison."""
     exp = JobExperiment(job_key, seed=seed)
     exp.profile(4)
     fit_times, pred_times = [], []
     n_comp = exp.job.n_components
     for _ in range(repeats):
         t0 = time.time()
-        exp.trainer.fit(exp.graph_history[-n_comp:], steps=60)
+        exp.trainer.fit_resident(steps=60, latest_only=True)
         fit_times.append(time.time() - t0)
         graphs = exp.graph_history[-n_comp:]
         t0 = time.time()
@@ -34,6 +46,43 @@ def measure(job_key: str, seed: int = 0, repeats: int = 3) -> Dict:
             "fit_s_mean": float(np.mean(fit_times)),
             "fit_s_std": float(np.std(fit_times)),
             "predict_s_mean": float(np.mean(pred_times))}
+
+
+def measure_fit(job_key: str, seed: int = 0, repeats: int = 3) -> Dict:
+    """Legacy vs fast fit path, fine-tune (60 steps on the newest run) and
+    scratch retrain (160 steps on the history window).  Every path gets one
+    untimed warmup call first so the rows compare steady-state latency —
+    the resident scratch jit is already warm from profile()'s initial fit,
+    and leaving the others cold would bill their one-off compiles to the
+    legacy means only."""
+    exp = JobExperiment(job_key, seed=seed)
+    exp.profile(4)
+    n_comp = exp.job.n_components
+
+    def timed(fn):
+        fn()                                   # warmup (jit compile)
+        ts = []
+        for _ in range(repeats):
+            t0 = time.time()
+            fn()
+            ts.append(time.time() - t0)
+        return float(np.mean(ts)), float(np.std(ts))
+
+    leg_ft, leg_ft_std = timed(
+        lambda: exp.trainer.fit(exp.graph_history[-n_comp:], steps=60))
+    res_ft, res_ft_std = timed(
+        lambda: exp.trainer.fit_resident(steps=60, latest_only=True))
+    leg_sc, _ = timed(lambda: exp.trainer.fit(
+        exp.graph_history[-HISTORY_WINDOW:], steps=160, from_scratch=True))
+    res_sc, _ = timed(
+        lambda: exp.trainer.fit_resident(steps=160, from_scratch=True))
+    return {"job": job_key, "n_graphs": n_comp,
+            "finetune_s_legacy": leg_ft, "finetune_s_legacy_std": leg_ft_std,
+            "finetune_s_resident": res_ft,
+            "finetune_s_resident_std": res_ft_std,
+            "finetune_speedup": leg_ft / max(res_ft, 1e-9),
+            "scratch_s_legacy": leg_sc, "scratch_s_resident": res_sc,
+            "scratch_speedup": leg_sc / max(res_sc, 1e-9)}
 
 
 def measure_decision(job_key: str, seed: int = 0, repeats: int = 5) -> Dict:
@@ -109,6 +158,17 @@ def main(out_path: str = "BENCH_decision.json"):
         rows.append(r)
         print(f"fig5,{job},graphs={r['n_graphs']},fit={r['fit_s_mean']:.2f}s,"
               f"predict={r['predict_s_mean']:.3f}s")
+    fit_rows = []
+    for job in ("lr", "mpc", "kmeans", "gbt"):
+        r = measure_fit(job)
+        fit_rows.append(r)
+        print(f"fit,{job},graphs={r['n_graphs']},"
+              f"legacy={r['finetune_s_legacy']:.2f}s,"
+              f"resident={r['finetune_s_resident']:.2f}s,"
+              f"speedup={r['finetune_speedup']:.1f}x,"
+              f"scratch_legacy={r['scratch_s_legacy']:.2f}s,"
+              f"scratch_resident={r['scratch_s_resident']:.2f}s,"
+              f"scratch_speedup={r['scratch_speedup']:.1f}x")
     decision_rows = []
     for job in ("lr", "mpc", "kmeans", "gbt"):
         d = measure_decision(job)
@@ -120,9 +180,10 @@ def main(out_path: str = "BENCH_decision.json"):
               f"max_dev={d['max_abs_dev_sweep_vs_materialized']:.2e},"
               f"legacy_gap={d['max_rel_total_gap_vs_legacy_engine']:.3f}")
     with open(out_path, "w") as f:
-        json.dump({"fig5": rows, "decision": decision_rows}, f, indent=2)
+        json.dump({"fig5": rows, "fit": fit_rows,
+                   "decision": decision_rows}, f, indent=2)
     print(f"wrote {os.path.abspath(out_path)}")
-    return rows, decision_rows
+    return rows, fit_rows, decision_rows
 
 
 if __name__ == "__main__":

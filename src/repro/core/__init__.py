@@ -5,15 +5,17 @@ from repro.core.autoencoder import (embed_properties, encode,
 from repro.core.bell import BellModel, initial_scaleout
 from repro.core.ellis import EllisScaler
 from repro.core.encoding import binarizer, encode_properties, encode_property, hasher
-from repro.core.graph import (ComponentGraph, NodeAttrs, build_graph,
-                              historical_summary, stack_graphs, summary_node)
+from repro.core.graph import (ComponentGraph, NodeAttrs, TrainingCache,
+                              build_graph, historical_summary, stack_graphs,
+                              summary_node)
 from repro.core.model import forward, forward_batch, init_enel, n_params
 from repro.core.scaling import EnelScaler
 from repro.core.training import EnelTrainer, enel_loss
 
 __all__ = [
     "BellModel", "ComponentGraph", "EllisScaler", "EnelScaler", "EnelTrainer",
-    "NodeAttrs", "binarizer", "build_graph", "embed_properties",
+    "NodeAttrs", "TrainingCache", "binarizer", "build_graph",
+    "embed_properties",
     "encode", "encode_properties", "encode_property", "enel_loss", "forward",
     "forward_batch", "hasher", "historical_summary", "init_autoencoder",
     "init_enel", "initial_scaleout", "n_params", "stack_graphs",

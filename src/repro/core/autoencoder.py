@@ -57,9 +57,6 @@ def _adam_update(params, opt, batch, lr):
     return params, (mu, nu, t), loss
 
 
-_adam_step = jax.jit(_adam_update)
-
-
 @jax.jit
 def _adam_run_fixed(params, opt, batch, lr):
     def body(carry, _):

@@ -108,13 +108,23 @@ def build_graph(nodes: Sequence[NodeAttrs], edges: Sequence[tuple],
     return g
 
 
+STACK_KEYS = ("context", "metrics", "metrics_valid", "a_raw", "z_raw", "r",
+              "runtime", "runtime_valid", "overhead", "overhead_valid",
+              "adj", "mask", "is_summary")
+
+
 def stack_graphs(graphs: Sequence[ComponentGraph]) -> Dict[str, np.ndarray]:
     """Batch of padded graphs -> dict of stacked arrays for the jit model."""
     f = lambda attr: np.stack([getattr(g, attr) for g in graphs])
-    return {k: f(k) for k in ("context", "metrics", "metrics_valid", "a_raw",
-                              "z_raw", "r", "runtime", "runtime_valid",
-                              "overhead", "overhead_valid", "adj", "mask",
-                              "is_summary")}
+    return {k: f(k) for k in STACK_KEYS}
+
+
+def pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n (jit shape bucketing)."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
 
 
 # --------------------------------------------------------------- sweep engine
@@ -237,6 +247,183 @@ def materialize_candidate(template: SweepTemplate,
     out["z_raw"] = deltas["z_raw"][c]
     out["r"] = deltas["r"][c]
     return out
+
+
+# ------------------------------------------------------------ training cache
+# Device-resident ring buffer of stacked graphs: the runner appends each
+# run's graphs ONCE, and every (re)fit trains straight on the resident
+# (capacity, max_nodes, ...) buffers — one jit shape for the whole campaign
+# instead of a host restack + transfer + shape-bucketed recompile per call.
+
+def _cache_spec(max_nodes: int) -> Dict[str, tuple]:
+    """(shape, dtype, fill) per stacked key; fills mirror build_graph's
+    padding so an unfilled slot is exactly an ``empty_graph()``."""
+    n = max_nodes
+    return {
+        "context": ((n, CTX_DIM), np.float32, 0.0),
+        "metrics": ((n, N_METRICS), np.float32, 0.0),
+        "metrics_valid": ((n,), bool, False),
+        "a_raw": ((n,), np.float32, 1.0),
+        "z_raw": ((n,), np.float32, 1.0),
+        "r": ((n,), np.float32, 1.0),
+        "runtime": ((n,), np.float32, 0.0),
+        "runtime_valid": ((n,), bool, False),
+        "overhead": ((n,), np.float32, 0.0),
+        "overhead_valid": ((n,), bool, False),
+        "adj": ((n, n), bool, False),
+        "mask": ((n,), bool, False),
+        "is_summary": ((n,), bool, False),
+    }
+
+
+def node_extent(g: ComponentGraph) -> int:
+    """1 + index of the last real node slot (graphs fill slots from 0)."""
+    idx = np.flatnonzero(g.mask)
+    return int(idx.max()) + 1 if idx.size else 1
+
+
+def _fit_nodes(v: np.ndarray, key: str, n: int) -> np.ndarray:
+    """Slice or pad one graph attribute to ``n`` node slots."""
+    spec = _cache_spec(n)[key]
+    if key == "adj":
+        out = np.full(spec[0], spec[2], spec[1])
+        m = min(v.shape[0], n)
+        out[:m, :m] = v[:m, :m]
+        return out
+    if v.shape[0] == n:
+        return v.astype(spec[1], copy=False)
+    out = np.full(spec[0], spec[2], spec[1])
+    m = min(v.shape[0], n)
+    out[:m] = v[:m]
+    return out
+
+
+def compact_rows(graphs: Sequence[ComponentGraph],
+                 max_nodes: int) -> Dict[str, np.ndarray]:
+    """Stack ONLY the given graphs, sliced/padded to ``max_nodes`` slots.
+
+    Runner graphs are padded to MAX_NODES but hold far fewer real nodes
+    (longest job: 5 stages + 2 summary preds); training on compact 8-slot
+    rows quarters the dense N x N pair work with bit-identical losses (the
+    dropped slots are fully masked).
+    """
+    return {k: np.stack([_fit_nodes(getattr(g, k), k, max_nodes)
+                         for g in graphs]) for k in STACK_KEYS}
+
+
+def _append_stacked_impl(buffers, rows, idx):
+    import jax
+    return jax.tree_util.tree_map(
+        lambda b, v: b.at[idx].set(v.astype(b.dtype)), buffers, rows)
+
+
+def _gather_rows_impl(buffers, idx):
+    import jax
+    return jax.tree_util.tree_map(lambda b: b[idx], buffers)
+
+
+_JIT_HELPERS: Dict[str, object] = {}
+
+
+def _jit_helper(name: str, fn):
+    """jax.jit on first use — keeps this module importable without jax."""
+    f = _JIT_HELPERS.get(name)
+    if f is None:
+        import jax
+        f = jax.jit(fn)
+        _JIT_HELPERS[name] = f
+    return f
+
+
+def append_stacked(buffers: Dict, rows: Dict, idx) -> Dict:
+    """Scatter freshly-stacked rows into the device ring buffers at ``idx``
+    (jitted; one compile per rows-per-append shape)."""
+    return _jit_helper("append", _append_stacked_impl)(buffers, rows, idx)
+
+
+class TrainingCache:
+    """Device-resident ring buffer of stacked component graphs.
+
+    ``extend`` appends incrementally (newest overwrite oldest once full);
+    ``full_batch``/``latest_batch`` hand back resident device arrays plus a
+    per-slot 0/1 weight vector for the loss — unfilled or padding slots are
+    all-masked empty graphs with weight 0, so ring contents are equivalent
+    to a one-shot :func:`stack_graphs` of the same graphs.
+    """
+
+    def __init__(self, capacity: int, max_nodes: int = 8):
+        import jax.numpy as jnp
+        self.capacity = int(capacity)
+        self.max_nodes = int(max_nodes)
+        self.buffers = {
+            k: jnp.full((self.capacity,) + shape, fill, dtype)
+            for k, (shape, dtype, fill) in _cache_spec(self.max_nodes).items()}
+        self.pos = 0          # next write slot
+        self.count = 0        # filled slots
+        self.latest = np.zeros(0, np.int64)   # slots of the last extend()
+
+    def _grow(self, new_nodes: int) -> None:
+        """Reallocate with more node slots, padding existing rows."""
+        import jax.numpy as jnp
+        old = self.buffers
+        grown = {}
+        for k, (shape, dtype, fill) in _cache_spec(new_nodes).items():
+            b = jnp.full((self.capacity,) + shape, fill, dtype)
+            ov = old[k]
+            if k == "adj":
+                b = b.at[:, :ov.shape[1], :ov.shape[2]].set(ov)
+            else:
+                b = b.at[:, :ov.shape[1]].set(ov)
+            grown[k] = b
+        self.buffers = grown
+        self.max_nodes = new_nodes
+
+    def extend(self, graphs: Sequence[ComponentGraph]) -> np.ndarray:
+        """Append graphs (newest kept if more than ``capacity``); returns the
+        ring slots written — also remembered as ``latest`` for fine-tuning."""
+        import jax.numpy as jnp
+        graphs = list(graphs)[-self.capacity:]
+        if not graphs:
+            return np.zeros(0, np.int64)
+        need = max(node_extent(g) for g in graphs)
+        if need > self.max_nodes:
+            self._grow(pow2_bucket(need))
+        rows = compact_rows(graphs, self.max_nodes)
+        idx = (self.pos + np.arange(len(graphs))) % self.capacity
+        self.buffers = append_stacked(
+            self.buffers, {k: jnp.asarray(v) for k, v in rows.items()},
+            jnp.asarray(idx))
+        self.pos = int((self.pos + len(graphs)) % self.capacity)
+        self.count = min(self.capacity, self.count + len(graphs))
+        self.latest = idx
+        return idx
+
+    def full_batch(self):
+        """(device batch over ALL slots, per-slot weights) for scratch fits."""
+        w = np.zeros(self.capacity, np.float32)
+        w[:self.count] = 1.0
+        return self.buffers, w
+
+    def latest_batch(self):
+        """(gathered device batch, weights) over the newest extend(), padded
+        to a power-of-two row count so fine-tunes share one jit shape."""
+        import jax.numpy as jnp
+        m = len(self.latest)
+        b = pow2_bucket(max(m, 1))
+        idx = np.zeros(b, np.int64)
+        idx[:m] = self.latest
+        w = np.zeros(b, np.float32)
+        w[:m] = 1.0
+        return _jit_helper("gather", _gather_rows_impl)(
+            self.buffers, jnp.asarray(idx)), w
+
+    def stacked_host(self) -> Dict[str, np.ndarray]:
+        """Host copy of the filled slots, oldest -> newest (tests/debug)."""
+        if self.count < self.capacity:
+            order = np.arange(self.count)
+        else:
+            order = (self.pos + np.arange(self.capacity)) % self.capacity
+        return {k: np.asarray(v)[order] for k, v in self.buffers.items()}
 
 
 def summary_node(nodes: Sequence[NodeAttrs], name: str,

@@ -16,12 +16,14 @@ iterations), exactly the paper's online-inference mode.  ~5k parameters —
 
 Two inference entry points share the math:
 
-* ``forward`` / ``forward_batch`` — the original per-graph path (training
-  always differentiates through this inline-jnp path).
+* ``forward`` / ``forward_batch`` — the original per-graph path.
 * ``forward_stacked`` — batched inference over stacked (B, N, ...) arrays.
   With the graph-prop kernel flag enabled (``ENEL_GRAPH_PROP_KERNEL=1`` or
   :func:`set_graph_prop_kernel`), eqs. 6-7 run as one fused Pallas kernel
-  (``repro.kernels.graph_prop``); otherwise it is ``vmap(forward)``.
+  (``repro.kernels.graph_prop``); otherwise it is ``vmap(forward)``.  Both
+  routes are differentiable — the kernel carries a custom VJP backed by a
+  backward Pallas kernel — so training (``enel_loss``) goes through
+  ``forward_stacked`` and honours the same flag.
 * ``sweep_per_component`` — the batched candidate-sweep decision path: one
   candidate-invariant template + per-candidate deltas, assembled and
   evaluated inside a single jit (used by ``EnelScaler.recommend``).
@@ -153,8 +155,14 @@ def _propagate(params, x, adj, m_obs, valid,
     return e, m_hat
 
 
-def _readout(params, g, a_vec, z_vec, adj, e, m_hat) -> Dict[str, jax.Array]:
-    """eqs. 3-5 for ONE graph given propagated metrics and edge weights."""
+def _readout(params, g, a_vec, z_vec, adj, e, m_hat,
+             levels: int = MAX_LEVELS) -> Dict[str, jax.Array]:
+    """eqs. 3-5 for ONE graph given propagated metrics and edge weights.
+
+    ``levels`` bounds the eq.5 accumulation rounds; the longest real-edge
+    chain never exceeds the propagation depth, so a depth-lowered value is
+    exact (same fixed-point argument as :func:`_propagate`).
+    """
     valid = g["metrics_valid"]
     m_used = jnp.where(valid[:, None], g["metrics"], m_hat)
 
@@ -177,7 +185,7 @@ def _readout(params, g, a_vec, z_vec, adj, e, m_hat) -> Dict[str, jax.Array]:
             jnp.where(real_edge, tt[None, :], 0.0), axis=1)
         return t_node + pred_best
 
-    tt_hat = jax.lax.fori_loop(0, MAX_LEVELS, acc_step, t_node)
+    tt_hat = jax.lax.fori_loop(0, levels, acc_step, t_node)
     tt_hat = jnp.where(g["mask"] & ~g["is_summary"], tt_hat, 0.0)
 
     return {"overhead": o_hat, "runtime": t_hat, "acc_runtime": tt_hat,
@@ -194,7 +202,7 @@ def forward(params: Dict, g: Dict,
     a_vec, z_vec, x, adj = _prelude(g)
     e, m_hat = _propagate(params, x, adj, g["metrics"], g["metrics_valid"],
                           levels)
-    return _readout(params, g, a_vec, z_vec, adj, e, m_hat)
+    return _readout(params, g, a_vec, z_vec, adj, e, m_hat, levels)
 
 
 forward_batch = jax.vmap(forward, in_axes=(None, 0))
@@ -218,7 +226,8 @@ def forward_stacked(params: Dict, batch: Dict,
     a_vec, z_vec, x, adj = _prelude(batch)
     e, m_hat = graph_prop(params, x, adj, batch["metrics"],
                           batch["metrics_valid"], levels=levels)
-    return jax.vmap(_readout, in_axes=(None, 0, 0, 0, 0, 0, 0))(
+    return jax.vmap(functools.partial(_readout, levels=levels),
+                    in_axes=(None, 0, 0, 0, 0, 0, 0))(
         params, batch, a_vec, z_vec, adj, e, m_hat)
 
 

@@ -28,9 +28,11 @@ when exact per-candidate contexts are required.
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import defaultdict
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bell import BellModel, initial_scaleout
@@ -52,6 +54,53 @@ Z_PROBE = 2.0e5
 H_SLOT = "__H__"          # placeholder name marking the H-summary node slot
 
 
+class _TemplateDeviceCache:
+    """Device-resident sweep-template reuse ACROSS decision points.
+
+    The template base arrays (K, N, ...) are candidate-invariant and change
+    little between decision points with the same remaining-component count
+    (across runs they are often identical): only the entries derived from
+    the current scale-out or the latest summaries move.  One device copy is
+    kept per (remaining components, node slots, candidate count) key, and a
+    per-key host diff re-ships ONLY the arrays whose values changed — the
+    small per-candidate deltas are still rebuilt and shipped every decision
+    (they are donated to the sweep jit off-CPU, so they must be fresh).
+    """
+
+    def __init__(self):
+        self._slots: Dict[Tuple[int, int, int], Tuple[Dict, Dict]] = {}
+        self.transfers = 0          # device uploads performed
+        self.skips = 0              # uploads avoided by the host diff
+
+    def adopt(self, template: SweepTemplate, n_candidates: int
+              ) -> SweepTemplate:
+        """Return ``template`` with ``base``/``h_onehot`` swapped for cached
+        device arrays (uploading only what changed since last decision)."""
+        k, n = template.base["mask"].shape
+        key = (k, n, n_candidates)
+        host_new = dict(template.base, __h_onehot__=template.h_onehot)
+        slot = self._slots.get(key)
+        if slot is None:
+            dev = {kk: jnp.asarray(v) for kk, v in host_new.items()}
+            self._slots[key] = ({kk: v.copy() for kk, v in host_new.items()},
+                                dev)
+            self.transfers += len(host_new)
+        else:
+            host, dev = slot
+            for kk, v in host_new.items():
+                if np.array_equal(host[kk], v):
+                    self.skips += 1
+                    continue
+                dev[kk] = jnp.asarray(v)
+                host[kk] = v.copy()
+                self.transfers += 1
+            self._slots[key] = (host, dev)
+        _, dev = self._slots[key]
+        return dataclasses.replace(
+            template, base={kk: dev[kk] for kk in template.base},
+            h_onehot=dev["__h_onehot__"])
+
+
 class EnelScaler:
     def __init__(self, trainer: EnelTrainer, scaleout_range: Tuple[int, int],
                  beta: int = 3, candidate_stride: int = 1):
@@ -66,6 +115,8 @@ class EnelScaler:
         # last sweep diagnostics: candidates list + (C, K) per-component preds
         self.last_candidates: List[int] = []
         self.last_per_component: Optional[np.ndarray] = None
+        # device-resident template arrays reused across decision points
+        self.template_cache = _TemplateDeviceCache()
 
     # --------------------------------------------------------------- history
     def record_component(self, comp_idx: int, nodes: Sequence[NodeAttrs],
@@ -196,6 +247,7 @@ class EnelScaler:
             graph_builder=graph_builder, next_comp=next_comp,
             n_components=n_components, current_scaleout=current_scaleout,
             candidates=candidates, current_summary=current_summary)
+        template = self.template_cache.adopt(template, len(candidates))
         per_comp = self.trainer.predict_sweep(template, deltas)    # (C, K)
         self.last_candidates = list(candidates)
         self.last_per_component = per_comp

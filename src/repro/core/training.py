@@ -4,6 +4,18 @@ Targets: observed node runtimes, observed rescale overheads and observed
 metric vectors (propagation loss).  Adam over the ~5k-parameter model; a
 "retrain from scratch every 5th run, fine-tune in between" policy mirroring
 the paper's protocol lives in :class:`EnelTrainer`.
+
+Two fit routes share the loss/optimizer math:
+
+* ``EnelTrainer.fit`` — legacy list-of-graphs API: host restack + power-of-2
+  bucketing + a frozen metric-dropout copy appended to the batch.
+* ``EnelTrainer.fit_resident`` — the online fast path: trains directly on the
+  device-resident :class:`~repro.core.graph.TrainingCache` ring buffer (fed
+  incrementally by the runner), with metric dropout sampled on-device PER
+  STEP inside the scanned Adam loop (fresh mask each step, no 2x batch) and
+  per-slot weights selecting the scratch window vs. the newest run.  Both
+  differentiate through ``forward_stacked`` and so honour the fused
+  graph-prop kernel flag (custom VJP).
 """
 from __future__ import annotations
 
@@ -16,7 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import model as enel_model
-from repro.core.graph import ComponentGraph, stack_graphs
+from repro.core.graph import (ComponentGraph, TrainingCache, pow2_bucket,
+                              stack_graphs)
 
 HUBER_DELTA = 10.0
 
@@ -26,27 +39,46 @@ def _huber(err: jax.Array, delta: float = HUBER_DELTA) -> jax.Array:
     return jnp.where(a <= delta, 0.5 * err * err, delta * (a - 0.5 * delta))
 
 
-def enel_loss(params: Dict, batch: Dict) -> Tuple[jax.Array, Dict]:
-    out = enel_model.forward_batch(params, batch)
+def enel_loss(params: Dict, batch: Dict, weights: Optional[jax.Array] = None,
+              use_kernel: bool = False) -> Tuple[jax.Array, Dict]:
+    """Training loss over a stacked graph batch.
+
+    ``weights`` (B,) 0/1 scales each graph's contribution (ring-buffer slots
+    outside the training window); ``use_kernel`` routes eqs. 6-7 through the
+    fused Pallas kernel + its custom VJP (resolve the flag before jitting).
+    """
+    out = enel_model.forward_stacked(params, batch, use_kernel=use_kernel)
     rt_mask = batch["runtime_valid"] & batch["mask"] & ~batch["is_summary"]
     rt_err = jnp.where(rt_mask, out["runtime"] - batch["runtime"], 0.0)
-    l_rt = jnp.sum(_huber(rt_err)) / jnp.maximum(rt_mask.sum(), 1)
 
     ov_mask = batch["overhead_valid"] & batch["mask"]
     ov_err = jnp.where(ov_mask, out["overhead"] - batch["overhead"], 0.0)
-    l_ov = jnp.sum(_huber(ov_err)) / jnp.maximum(ov_mask.sum(), 1)
 
     # metric propagation loss: predict observed metrics from predecessors
     m_mask = (batch["metrics_valid"] & batch["mask"])[..., None]
     m_err = jnp.where(m_mask, out["metrics"] - batch["metrics"], 0.0)
-    l_m = jnp.sum(jnp.square(m_err)) / jnp.maximum(m_mask.sum(), 1)
+
+    if weights is None:
+        l_rt = jnp.sum(_huber(rt_err)) / jnp.maximum(rt_mask.sum(), 1)
+        l_ov = jnp.sum(_huber(ov_err)) / jnp.maximum(ov_mask.sum(), 1)
+        l_m = jnp.sum(jnp.square(m_err)) / jnp.maximum(m_mask.sum(), 1)
+    else:
+        w1 = weights[:, None]
+        l_rt = jnp.sum(_huber(rt_err) * w1) / \
+            jnp.maximum(jnp.sum(rt_mask * w1), 1.0)
+        l_ov = jnp.sum(_huber(ov_err) * w1) / \
+            jnp.maximum(jnp.sum(ov_mask * w1), 1.0)
+        w2 = weights[:, None, None]
+        l_m = jnp.sum(jnp.square(m_err) * w2) / \
+            jnp.maximum(jnp.sum(m_mask * w2), 1.0)
 
     loss = l_rt + l_ov + 0.5 * l_m
     return loss, {"runtime": l_rt, "overhead": l_ov, "metrics": l_m}
 
 
-def _adam_update(params, opt, batch, lr):
-    (loss, parts), g = jax.value_and_grad(enel_loss, has_aux=True)(params, batch)
+def _adam_update(params, opt, batch, lr, weights=None, use_kernel=False):
+    (loss, parts), g = jax.value_and_grad(enel_loss, has_aux=True)(
+        params, batch, weights, use_kernel)
     mu, nu, t = opt
     t = t + 1
     mu = jax.tree_util.tree_map(lambda m, gg: 0.9 * m + 0.1 * gg, mu, g)
@@ -61,14 +93,11 @@ def _adam_update(params, opt, batch, lr):
     return jax.tree_util.tree_map(upd, params, mu, nu), (mu, nu, t), loss
 
 
-_adam_step = jax.jit(_adam_update)
-
-
-def _adam_run_impl(params, opt, batch, steps, lr):
+def _adam_run_impl(params, opt, batch, steps, lr, use_kernel=False):
     """`steps` Adam updates fused into one jit (dispatch-bound otherwise)."""
     def body(carry, _):
         p, o = carry
-        p, o, loss = _adam_update(p, o, batch, lr)
+        p, o, loss = _adam_update(p, o, batch, lr, None, use_kernel)
         return (p, o), loss
 
     (params, opt), losses = jax.lax.scan(body, (params, opt), None,
@@ -76,11 +105,11 @@ def _adam_run_impl(params, opt, batch, steps, lr):
     return params, opt, losses[-1]
 
 
-_adam_run = jax.jit(_adam_run_impl, static_argnums=3)
+_adam_run = jax.jit(_adam_run_impl, static_argnums=(3, 5))
 # params/opt are replaced by the returned pytrees every call -> donating their
 # buffers avoids a copy per fit; donation is a no-op (warning) on CPU, so the
 # donated variant is only selected off-CPU.
-_adam_run_donated = jax.jit(_adam_run_impl, static_argnums=3,
+_adam_run_donated = jax.jit(_adam_run_impl, static_argnums=(3, 5),
                             donate_argnums=(0, 1))
 
 
@@ -89,23 +118,66 @@ def _adam_run_fn():
     return _adam_run if jax.default_backend() == "cpu" else _adam_run_donated
 
 
-def _pow2_bucket(n: int) -> int:
-    b = 1
-    while b < n:
-        b *= 2
-    return b
+def _adam_run_resident_impl(params, opt, batch, weights, key, lr, dropout_p,
+                            steps, use_kernel):
+    """Scanned Adam over a resident batch with PER-STEP metric dropout.
+
+    Each step samples a fresh on-device mask hiding task-set metrics with
+    probability ``dropout_p`` (summary nodes kept), so runtime prediction is
+    trained through the metric-PROPAGATION path — the legacy route froze one
+    host-sampled mask and doubled the batch instead.
+    """
+    def body(carry, _):
+        p, o, k = carry
+        k, sub = jax.random.split(k)
+        drop = (jax.random.uniform(sub, batch["metrics_valid"].shape)
+                < dropout_p) & ~batch["is_summary"]
+        b = dict(batch, metrics_valid=batch["metrics_valid"] & ~drop)
+        p, o, loss = _adam_update(p, o, b, lr, weights, use_kernel)
+        return (p, o, k), loss
+
+    (params, opt, _), losses = jax.lax.scan(body, (params, opt, key), None,
+                                            length=steps)
+    return params, opt, losses[-1]
+
+
+_adam_run_resident = jax.jit(_adam_run_resident_impl, static_argnums=(7, 8))
+# batch/weights live in the TrainingCache and MUST NOT be donated; params/opt
+# follow the same replace-every-call pattern as the legacy run.
+_adam_run_resident_donated = jax.jit(_adam_run_resident_impl,
+                                     static_argnums=(7, 8),
+                                     donate_argnums=(0, 1))
+
+
+@functools.lru_cache(maxsize=1)
+def _adam_run_resident_fn():
+    return _adam_run_resident if jax.default_backend() == "cpu" \
+        else _adam_run_resident_donated
+
+
+def _round_steps(steps: int) -> int:
+    """Round DOWN to a power of two in [8, 512] (jit cache friendliness;
+    the floor keeps step counts comparable with the historical fit rows)."""
+    p2 = 1 << max(0, (max(steps, 1)).bit_length() - 1)
+    return max(8, min(512, p2 if steps - p2 < p2 else p2 * 2))
 
 
 class EnelTrainer:
     """One global reusable model + the paper's (re)training cadence."""
 
-    def __init__(self, seed: int = 0, lr: float = 5e-3):
+    def __init__(self, seed: int = 0, lr: float = 5e-3,
+                 cache_capacity: int = 96):
         self.seed = seed
         self.lr = lr
         self.params = enel_model.init_enel(jax.random.PRNGKey(seed))
         self._reset_opt()
         self.runs_seen = 0
         self.last_fit_seconds = 0.0
+        # device-resident history ring for the online fast path (lazy: sized
+        # to the first graphs seen); legacy fit() keeps working without it
+        self.cache: Optional[TrainingCache] = None
+        self.cache_capacity = cache_capacity
+        self._fit_calls = 0
 
     def _reset_opt(self):
         zeros = jax.tree_util.tree_map(jnp.zeros_like, self.params)
@@ -135,7 +207,7 @@ class EnelTrainer:
         # jit caches a handful of shapes instead of one per history length
         from repro.core.graph import empty_graph
         n = len(graphs)
-        graphs = graphs + [empty_graph()] * (_pow2_bucket(n) - n)
+        graphs = graphs + [empty_graph()] * (pow2_bucket(n) - n)
         stacked = stack_graphs(graphs)
         if metric_dropout > 0:
             rng = np.random.RandomState(self.seed + self.runs_seen)
@@ -146,13 +218,63 @@ class EnelTrainer:
             stacked = {k: np.concatenate([stacked[k], aug[k]])
                        for k in stacked}
         batch = {k: jnp.asarray(v) for k, v in stacked.items()}
-        # round steps to the nearest power of two (jit cache friendliness)
-        p2 = 1 << max(0, (max(steps, 1)).bit_length() - 1)
-        steps = max(8, min(512, p2 if steps - p2 < p2 else p2 * 2))
+        steps = _round_steps(steps)
         self.params, self.opt, loss = _adam_run_fn()(
-            self.params, self.opt, batch, steps, self.lr)
+            self.params, self.opt, batch, steps, self.lr,
+            enel_model.graph_prop_kernel_enabled())
         self.last_fit_seconds = time.time() - t0
         return float(loss)
+
+    # ------------------------------------------------- resident fast path
+    def extend_history(self, graphs: Sequence[ComponentGraph]) -> None:
+        """Append a run's graphs to the device-resident training ring (the
+        runner calls this once per run; fits then reuse the buffers)."""
+        graphs = list(graphs)
+        if not graphs:
+            return
+        if self.cache is None:
+            self.cache = TrainingCache(self.cache_capacity)
+        self.cache.extend(graphs)
+
+    def fit_resident(self, *, steps: int = 200, from_scratch: bool = False,
+                     metric_dropout: float = 0.5,
+                     latest_only: bool = False) -> float:
+        """Train on the resident ring buffer; returns final loss.
+
+        ``latest_only`` restricts the loss to the newest ``extend_history``
+        batch (the paper's fine-tune step) via a gathered power-of-two slice;
+        otherwise the whole ring (scratch-retrain window) trains with
+        per-slot weights masking unfilled slots.  Metric dropout is sampled
+        on-device per Adam step (see ``_adam_run_resident_impl``).
+        """
+        if self.cache is None or self.cache.count == 0:
+            return float("nan")
+        t0 = time.time()
+        if from_scratch:
+            self.params = enel_model.init_enel(jax.random.PRNGKey(self.seed))
+            self._reset_opt()
+        batch, weights = (self.cache.latest_batch() if latest_only
+                          else self.cache.full_batch())
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed ^ 0x5eed),
+                                 self._fit_calls)
+        self._fit_calls += 1
+        use_kernel = enel_model.graph_prop_kernel_enabled()
+        self.params, self.opt, loss = _adam_run_resident_fn()(
+            self.params, self.opt, batch, jnp.asarray(weights), key, self.lr,
+            float(metric_dropout), _round_steps(steps), use_kernel)
+        self.last_fit_seconds = time.time() - t0
+        return float(loss)
+
+    def observe_run_resident(self, *, retrain_every: int = 5,
+                             steps: int = 200,
+                             fine_tune_steps: int = 60) -> float:
+        """Paper cadence (§V-B.3) on the resident ring: scratch-retrain on
+        the full history window every `retrain_every` runs, fine-tune on the
+        newest run's graphs (the last ``extend_history``) in between."""
+        self.runs_seen += 1
+        if (self.runs_seen % retrain_every) == 0:
+            return self.fit_resident(steps=steps, from_scratch=True)
+        return self.fit_resident(steps=fine_tune_steps, latest_only=True)
 
     def observe_run(self, latest: Sequence[ComponentGraph],
                     history: Optional[Sequence[ComponentGraph]] = None,
@@ -171,7 +293,7 @@ class EnelTrainer:
         """Per-component total-runtime predictions (seconds)."""
         from repro.core.graph import empty_graph
         n = len(graphs)
-        padded = list(graphs) + [empty_graph()] * (_pow2_bucket(n) - n)
+        padded = list(graphs) + [empty_graph()] * (pow2_bucket(n) - n)
         batch = {k: jnp.asarray(v) for k, v in stack_graphs(padded).items()}
         return np.asarray(
             enel_model.predict_total_runtime(self.params, batch))[:n]

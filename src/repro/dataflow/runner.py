@@ -96,7 +96,7 @@ class JobExperiment:
         self.job_key = job_key
         self.sim = ClusterSim(seed=seed)
         self.encoder = ContextEncoder([self.job], seed=seed)
-        self.trainer = EnelTrainer(seed=seed)
+        self.trainer = EnelTrainer(seed=seed, cache_capacity=HISTORY_WINDOW)
         self.enel = EnelScaler(self.trainer, SCALEOUT_RANGE,
                                candidate_stride=candidate_stride)
         self.ellis = EllisScaler(SCALEOUT_RANGE,
@@ -179,6 +179,7 @@ class JobExperiment:
             run, graphs, scaleouts, _, _ = self._execute(
                 scaler=None, inject_failures=False, initial_s=s)
             self.graph_history.extend(graphs)
+            self.trainer.extend_history(graphs)
             self._run_idx += 1
             self.stats.append(RunStats(self._run_idx, "profiling",
                                        run.runtime, 0.0, 0.0,
@@ -191,8 +192,9 @@ class JobExperiment:
             st.target = self.target
             st.violation = max(0.0, st.runtime - self.target)
         self.ellis.refit()
-        self.trainer.fit(self.graph_history[-HISTORY_WINDOW:],
-                         steps=160, from_scratch=True)
+        # initial model: scratch-train on the resident ring (profiling graphs
+        # were appended run-by-run above — no restack)
+        self.trainer.fit_resident(steps=160, from_scratch=True)
 
     # -------------------------------------------------------------- adaptive
     def adaptive_run(self, method: str, inject_failures: bool) -> RunStats:
@@ -206,12 +208,16 @@ class JobExperiment:
         run, graphs, scaleouts, decide_s, decide_n = self._execute(
             scaler=method, inject_failures=inject_failures, initial_s=s0)
         self.graph_history.extend(graphs)
+        # keep the resident ring in sync for BOTH methods so a later Enel
+        # scratch retrain sees the full history window
+        self.trainer.extend_history(graphs)
         self._run_idx += 1
         fit_s = 0.0
         if method == "enel":
             t0 = time.time()
-            self.trainer.observe_run(
-                graphs, history=self.graph_history[-HISTORY_WINDOW:],
+            # online fast path: graphs are already device-resident, so the
+            # cadence fit reuses the ring buffers (no restack per run)
+            self.trainer.observe_run_resident(
                 retrain_every=5, steps=160, fine_tune_steps=60)
             fit_s = time.time() - t0
         else:

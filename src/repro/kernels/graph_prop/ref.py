@@ -3,6 +3,9 @@
 Defines the semantics the Pallas kernel must reproduce: the dense N x N f3
 edge MLP, the predecessor-masked softmax, and ``levels`` rounds of
 level-synchronous f4 metric message passing with observed metrics pinned.
+
+:func:`graph_prop_ref_jnp` is the same math in differentiable jnp — its
+``jax.grad`` is the oracle for the backward Pallas kernel / custom VJP.
 """
 from __future__ import annotations
 
@@ -54,3 +57,46 @@ def graph_prop_ref(params: Dict, x: np.ndarray, adj: np.ndarray,
         m_prop = np.einsum("bij,bijm->bim", e, msg)
         m_cur = np.where(valid[:, :, None], m_obs, m_prop)
     return e, m_cur.astype(np.float32)
+
+
+def graph_prop_ref_jnp(params: Dict, x, adj, m_obs, valid, levels: int = 8):
+    """Differentiable jnp mirror of :func:`graph_prop_ref` (same shapes).
+
+    Gradient oracle for the custom-VJP/backward-kernel path: tests compare
+    ``jax.grad`` through this against the fused op's VJP.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    x = jnp.asarray(x, jnp.float32)
+    adj = jnp.asarray(adj, bool)
+    m_obs = jnp.asarray(m_obs, jnp.float32)
+    valid = jnp.asarray(valid, bool)
+    b, n, _ = x.shape
+    m = m_obs.shape[-1]
+
+    def mlp(layers, v, final_linear=True):
+        for li, l in enumerate(layers):
+            v = v @ l["w"] + l["b"]
+            if li < len(layers) - 1 or not final_linear:
+                v = jax.nn.leaky_relu(v, 0.1)
+        return v
+
+    xi = jnp.broadcast_to(x[:, :, None, :], (b, n, n, x.shape[-1]))
+    xj = jnp.broadcast_to(x[:, None, :, :], (b, n, n, x.shape[-1]))
+    h3 = mlp(params["f3"], jnp.concatenate([xi, xj], axis=-1))
+    logits = jax.nn.leaky_relu(h3, 0.1) @ params["attn_a"]
+    logits = jnp.where(adj, logits, -1e30)
+    sm = jax.nn.softmax(logits, axis=-1)
+    e = jnp.where(adj.any(axis=-1, keepdims=True), sm, 0.0)
+
+    def level_step(_, m_cur):
+        mj = jnp.where(valid[:, :, None], m_obs, m_cur)
+        f4_in = jnp.concatenate(
+            [h3, jnp.broadcast_to(mj[:, None, :, :], (b, n, n, m))], axis=-1)
+        msg = mlp(params["f4"], f4_in)
+        m_prop = jnp.einsum("bij,bijm->bim", e, msg)
+        return jnp.where(valid[:, :, None], m_obs, m_prop)
+
+    m_hat = jax.lax.fori_loop(0, levels, level_step, m_obs)
+    return e, m_hat

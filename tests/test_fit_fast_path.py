@@ -1,0 +1,247 @@
+"""Online-learning fast path: custom-VJP graph-prop kernel + TrainingCache.
+
+Gradient parity: differentiating ``enel_loss`` through the fused Pallas
+kernel (custom VJP -> backward Pallas kernel) must agree with the inline
+``vmap(forward)`` autodiff path on random masked DAGs, and the raw op's VJP
+must match ``jax.grad`` through the pure-jnp reference.  Cache equivalence:
+incremental ring-buffer appends must reproduce a one-shot ``stack_graphs``
+and the resident fit must match the legacy list-of-graphs fit when metric
+dropout is disabled.  (No hypothesis dependency — plain seeded RNG.)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import model as enel_model
+from repro.core.graph import (CTX_DIM, MAX_NODES, N_METRICS, NodeAttrs,
+                              TrainingCache, build_graph, stack_graphs)
+from repro.core.training import EnelTrainer, enel_loss
+
+
+def _random_full_batch(b, seed):
+    """Stacked training batch over random masked DAGs (all loss targets)."""
+    rng = np.random.RandomState(seed)
+    mask = rng.rand(b, MAX_NODES) < 0.8
+    mask[:, 0] = True
+    adj = np.tril(rng.rand(b, MAX_NODES, MAX_NODES) < 0.3, -1)
+    return {
+        "context": np.tanh(rng.randn(b, MAX_NODES, CTX_DIM)
+                           ).astype(np.float32),
+        "metrics": rng.rand(b, MAX_NODES, N_METRICS).astype(np.float32),
+        "metrics_valid": (rng.rand(b, MAX_NODES) < 0.5) & mask,
+        "a_raw": rng.uniform(1, 36, (b, MAX_NODES)).astype(np.float32),
+        "z_raw": rng.uniform(1, 36, (b, MAX_NODES)).astype(np.float32),
+        "r": rng.uniform(0.5, 1.0, (b, MAX_NODES)).astype(np.float32),
+        "runtime": rng.uniform(1, 30, (b, MAX_NODES)).astype(np.float32),
+        "runtime_valid": (rng.rand(b, MAX_NODES) < 0.7) & mask,
+        "overhead": rng.uniform(0, 3, (b, MAX_NODES)).astype(np.float32),
+        "overhead_valid": (rng.rand(b, MAX_NODES) < 0.3) & mask,
+        "adj": adj,
+        "mask": mask,
+        "is_summary": (rng.rand(b, MAX_NODES) < 0.2) & mask,
+    }
+
+
+def _tree_allclose(a, b, atol, rtol):
+    fa = jax.tree_util.tree_leaves(a)
+    fb = jax.tree_util.tree_leaves(b)
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=atol, rtol=rtol)
+
+
+# ------------------------------------------------------------ gradient parity
+@pytest.mark.parametrize("b,seed", [(8, 1)])
+def test_vjp_matches_jnp_reference(b, seed):
+    """Raw op: custom-VJP grads == jax.grad through graph_prop_ref_jnp for
+    params, x AND m_obs under random output cotangents."""
+    from repro.kernels.graph_prop.ops import graph_prop
+    from repro.kernels.graph_prop.ref import graph_prop_ref_jnp
+    rng = np.random.RandomState(seed)
+    x = rng.randn(b, MAX_NODES, enel_model.X_DIM).astype(np.float32)
+    adj = np.tril(rng.rand(b, MAX_NODES, MAX_NODES) < 0.3, -1)
+    valid = rng.rand(b, MAX_NODES) < 0.5
+    m = rng.rand(b, MAX_NODES, N_METRICS).astype(np.float32)
+    ce = rng.randn(b, MAX_NODES, MAX_NODES).astype(np.float32)
+    cm = rng.randn(b, MAX_NODES, N_METRICS).astype(np.float32)
+    params = enel_model.init_enel(jax.random.PRNGKey(seed))
+
+    def scalar(fn):
+        def f(p, xx, mm):
+            e, mh = fn(p, xx, mm)
+            return jnp.sum(e * ce) + jnp.sum(mh * cm)
+        return jax.value_and_grad(f, argnums=(0, 1, 2))
+
+    vk, gk = scalar(lambda p, xx, mm: graph_prop(
+        p, xx, jnp.asarray(adj), mm, jnp.asarray(valid)))(
+        params, jnp.asarray(x), jnp.asarray(m))
+    vr, gr = scalar(lambda p, xx, mm: graph_prop_ref_jnp(
+        p, xx, adj, mm, valid))(params, jnp.asarray(x), jnp.asarray(m))
+    np.testing.assert_allclose(float(vk), float(vr), rtol=1e-5)
+    _tree_allclose(gk, gr, atol=1e-4, rtol=1e-3)
+
+
+def test_enel_loss_grad_kernel_matches_inline():
+    """jax.grad(enel_loss) through forward_stacked(use_kernel=True) == the
+    inline vmap(forward) autodiff path on random masked DAGs."""
+    params = enel_model.init_enel(jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v) for k, v in _random_full_batch(6, 0).items()}
+    gi = jax.grad(lambda p: enel_loss(p, batch, None, False)[0])(params)
+    gk = jax.grad(lambda p: enel_loss(p, batch, None, True)[0])(params)
+    li = enel_loss(params, batch, None, False)[0]
+    lk = enel_loss(params, batch, None, True)[0]
+    np.testing.assert_allclose(float(li), float(lk), rtol=1e-5)
+    _tree_allclose(gi, gk, atol=2e-4, rtol=2e-3)
+
+
+def test_fit_resident_kernel_flag_matches_inline():
+    """The resident fit reaches the same parameters through either route
+    (fused kernel w/ custom VJP vs inline), i.e. training really can run
+    behind ENEL_GRAPH_PROP_KERNEL."""
+    def run(use_kernel):
+        enel_model.set_graph_prop_kernel(use_kernel)
+        try:
+            tr = EnelTrainer(seed=0, cache_capacity=8)
+            tr.extend_history([_chain_graph(k, seed=k) for k in range(4)])
+            loss = tr.fit_resident(steps=8, metric_dropout=0.0)
+        finally:
+            enel_model.set_graph_prop_kernel(False)
+        return loss, tr.params
+
+    l_inline, p_inline = run(False)
+    l_kernel, p_kernel = run(True)
+    np.testing.assert_allclose(l_inline, l_kernel, rtol=1e-4)
+    _tree_allclose(p_inline, p_kernel, atol=1e-5, rtol=1e-4)
+
+
+def test_legacy_fit_kernel_flag_matches_inline():
+    """EnelTrainer.fit (legacy restack path) honours the kernel flag too."""
+    graphs = [_chain_graph(k, seed=k) for k in range(2)]
+
+    def run(use_kernel):
+        enel_model.set_graph_prop_kernel(use_kernel)
+        try:
+            tr = EnelTrainer(seed=0)
+            loss = tr.fit(graphs, steps=8, metric_dropout=0.0)
+        finally:
+            enel_model.set_graph_prop_kernel(False)
+        return loss, tr.params
+
+    l_inline, p_inline = run(False)
+    l_kernel, p_kernel = run(True)
+    np.testing.assert_allclose(l_inline, l_kernel, rtol=1e-4)
+    _tree_allclose(p_inline, p_kernel, atol=1e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------- cache equivalence
+def _chain_graph(k, n=4, seed=0, max_nodes=MAX_NODES):
+    r = np.random.RandomState(100 + seed)
+    nodes = [NodeAttrs(f"n{i}", np.tanh(r.randn(CTX_DIM)).astype(np.float32),
+                       r.rand(N_METRICS).astype(np.float32), 4 + i, 8, 0.9,
+                       runtime=5.0 + i, overhead=0.5 if i == 0 else None)
+             for i in range(n)]
+    return build_graph(nodes, [(i, i + 1) for i in range(n - 1)], k,
+                       max_nodes=max_nodes)
+
+
+def test_cache_incremental_equals_one_shot_stack():
+    graphs = [_chain_graph(k, seed=k) for k in range(5)]
+    cache = TrainingCache(capacity=8, max_nodes=8)
+    cache.extend(graphs[:2])
+    cache.extend(graphs[2:])
+    host = cache.stacked_host()
+    ref = stack_graphs(graphs)
+    for k, v in host.items():
+        r = ref[k][:, :8, :8] if k == "adj" else \
+            (ref[k][:, :8] if ref[k].ndim > 1 else ref[k])
+        np.testing.assert_array_equal(v[:5], r, err_msg=k)
+
+
+def test_cache_ring_wraparound_keeps_newest():
+    graphs = [_chain_graph(k, seed=k) for k in range(7)]
+    cache = TrainingCache(capacity=4, max_nodes=8)
+    for g in graphs:
+        cache.extend([g])
+    host = cache.stacked_host()
+    ref = stack_graphs(graphs[-4:])
+    np.testing.assert_array_equal(host["runtime"], ref["runtime"][:, :8])
+    np.testing.assert_array_equal(host["adj"], ref["adj"][:, :8, :8])
+    assert cache.count == 4
+
+
+def test_cache_grows_node_slots():
+    cache = TrainingCache(capacity=4, max_nodes=4)
+    cache.extend([_chain_graph(0, n=3, seed=0)])
+    cache.extend([_chain_graph(1, n=7, seed=1)])       # forces 4 -> 8 slots
+    assert cache.max_nodes == 8
+    host = cache.stacked_host()
+    ref = stack_graphs([_chain_graph(0, n=3, seed=0),
+                        _chain_graph(1, n=7, seed=1)])
+    np.testing.assert_array_equal(host["mask"], ref["mask"][:, :8])
+    np.testing.assert_array_equal(host["metrics"], ref["metrics"][:, :8])
+
+
+def test_fit_resident_matches_legacy_fit_no_dropout():
+    """With per-step dropout off, training on the ring == the legacy host
+    restack path (same graphs, same step count, same seed)."""
+    graphs = [_chain_graph(k, seed=k) for k in range(5)]
+    tr_res = EnelTrainer(seed=0, cache_capacity=8)
+    tr_res.extend_history(graphs)
+    l_res = tr_res.fit_resident(steps=8, metric_dropout=0.0)
+    tr_leg = EnelTrainer(seed=0)
+    l_leg = tr_leg.fit(graphs, steps=8, metric_dropout=0.0)
+    np.testing.assert_allclose(l_res, l_leg, rtol=1e-4)
+    _tree_allclose(tr_res.params, tr_leg.params, atol=1e-5, rtol=1e-3)
+
+
+def test_fit_resident_latest_only_ignores_older_history():
+    """Fine-tuning on the newest extend() == training on just those graphs."""
+    old = [_chain_graph(k, seed=k) for k in range(3)]
+    new = [_chain_graph(k, seed=10 + k) for k in range(2)]
+    tr_a = EnelTrainer(seed=0, cache_capacity=8)
+    tr_a.extend_history(old)
+    tr_a.extend_history(new)
+    l_a = tr_a.fit_resident(steps=8, metric_dropout=0.0, latest_only=True)
+    tr_b = EnelTrainer(seed=0, cache_capacity=8)
+    tr_b.extend_history(new)
+    l_b = tr_b.fit_resident(steps=8, metric_dropout=0.0, latest_only=True)
+    np.testing.assert_allclose(l_a, l_b, rtol=1e-5)
+    _tree_allclose(tr_a.params, tr_b.params, atol=1e-6, rtol=1e-5)
+
+
+def test_fit_resident_per_step_dropout_trains():
+    tr = EnelTrainer(seed=0, cache_capacity=8)
+    tr.extend_history([_chain_graph(k, seed=k) for k in range(5)])
+    l1 = tr.fit_resident(steps=8, metric_dropout=0.5)
+    l2 = tr.fit_resident(steps=64, metric_dropout=0.5)
+    assert np.isfinite(l1) and np.isfinite(l2)
+    assert l2 < l1
+
+
+# ------------------------------------------------- sweep template device cache
+def test_template_device_cache_skips_unchanged_uploads():
+    from repro.core.scaling import EnelScaler
+
+    def builder(k, a, z, preds):
+        nodes = [NodeAttrs(f"st{i}", np.tanh(
+            np.random.RandomState(i).randn(CTX_DIM)).astype(np.float32),
+            None, a if i == 0 else z, z, 1.0 if a == z else 0.8)
+            for i in range(3)]
+        edges = [(i, i + 1) for i in range(2)] + \
+            [(3 + j, 0) for j in range(len(preds))]
+        return build_graph(nodes + list(preds), edges, k)
+
+    trainer = EnelTrainer(seed=0)
+    sc = EnelScaler(trainer, (4, 12), candidate_stride=4)
+    kw = dict(graph_builder=builder, next_comp=1, n_components=3,
+              elapsed=5.0, current_scaleout=8, target_runtime=50.0)
+    s1, t1, totals1 = sc.recommend(**kw)
+    first_transfers = sc.template_cache.transfers
+    assert first_transfers > 0 and sc.template_cache.skips == 0
+    s2, t2, totals2 = sc.recommend(**kw)
+    # identical decision context -> every base array re-upload is skipped
+    assert sc.template_cache.transfers == first_transfers
+    assert sc.template_cache.skips >= 10
+    assert (s1, t1) == (s2, t2) and totals1 == totals2
