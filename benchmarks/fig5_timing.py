@@ -21,6 +21,19 @@ from repro.dataflow import JOBS, JobExperiment
 from repro.dataflow.runner import HISTORY_WINDOW
 
 
+def merge_bench_json(out_path: str, updates: Dict) -> None:
+    """Merge section rows into the benchmark JSON without clobbering other
+    writers' sections (fig5/fit/decision here vs fleet/fleet_budget from
+    ``benchmarks/fleet_bench.py``)."""
+    data = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            data = json.load(f)
+    data.update(updates)
+    with open(out_path, "w") as f:
+        json.dump(data, f, indent=2)
+
+
 def measure(job_key: str, seed: int = 0, repeats: int = 3) -> Dict:
     """fit here is the runner's actual online path: a resident fine-tune on
     the newest run's graphs (same content the legacy row restacked).
@@ -94,10 +107,13 @@ def measure_decision(job_key: str, seed: int = 0, repeats: int = 5) -> Dict:
     between the batched sweep and per-graph predictions of the SAME
     template-derived graphs (materialized host-side per candidate).
     """
+    from repro.core import model as enel_model
     from repro.core.graph import materialize_candidate, summary_node
     from repro.dataflow.runner import (_component_nodes, _future_nodes,
                                        _to_graph)
 
+    traces0 = (enel_model.trace_count("sweep_per_component") +
+               enel_model.trace_count("fleet_sweep"))
     exp = JobExperiment(job_key, seed=seed)
     exp.profile(4)
     job = exp.job
@@ -148,7 +164,12 @@ def measure_decision(job_key: str, seed: int = 0, repeats: int = 5) -> Dict:
             "decide_ms_batched": timings["batched"] * 1e3,
             "speedup": timings["pergraph"] / timings["batched"],
             "max_abs_dev_sweep_vs_materialized": max_dev,
-            "max_rel_total_gap_vs_legacy_engine": rel_gap}
+            "max_rel_total_gap_vs_legacy_engine": rel_gap,
+            # sweep-jit compiles this job's decision context cost (warmup
+            # included) — the compile-amortization axis of the perf story
+            "decide_recompiles":
+                enel_model.trace_count("sweep_per_component") +
+                enel_model.trace_count("fleet_sweep") - traces0}
 
 
 def main(out_path: str = "BENCH_decision.json"):
@@ -178,10 +199,10 @@ def main(out_path: str = "BENCH_decision.json"):
               f"batched={d['decide_ms_batched']:.1f}ms,"
               f"speedup={d['speedup']:.1f}x,"
               f"max_dev={d['max_abs_dev_sweep_vs_materialized']:.2e},"
-              f"legacy_gap={d['max_rel_total_gap_vs_legacy_engine']:.3f}")
-    with open(out_path, "w") as f:
-        json.dump({"fig5": rows, "fit": fit_rows,
-                   "decision": decision_rows}, f, indent=2)
+              f"legacy_gap={d['max_rel_total_gap_vs_legacy_engine']:.3f},"
+              f"recompiles={d['decide_recompiles']}")
+    merge_bench_json(out_path, {"fig5": rows, "fit": fit_rows,
+                                "decision": decision_rows})
     print(f"wrote {os.path.abspath(out_path)}")
     return rows, fit_rows, decision_rows
 

@@ -1,0 +1,180 @@
+"""Fleet-scale decision benchmark: cross-job batched dispatch vs sequential
+per-job ``recommend``, plus the campaign compile-count budget.
+
+Two measurements:
+
+* **Throughput** — a fleet of concurrent jobs (all four job classes x seeds,
+  cycling) each needs a mid-run rescaling decision.  ``sequential`` answers
+  them one ``EnelScaler.recommend`` at a time (the dense per-job engine);
+  ``batched`` prepares shape-bucketed requests and answers all of them in
+  one ``DecisionService.decide`` call (sparse engine, one jit dispatch per
+  bucket, one transfer per group).  Reported at fleet sizes 1/8/32.
+
+* **Compile budget** — a full 4-job mini-campaign (profiling + adaptive runs
+  covering every remaining-component count) must compile the fleet sweep at
+  most once per visited shape-bucket key: the bucket ladders exist precisely
+  so this stays a small constant (~12) instead of O(runs x components).
+  The script FAILS (exit 1) if the trace count exceeds the visited-bucket
+  bound, or if the ladder lets the campaign visit more than MAX_BUCKETS
+  distinct keys.
+
+Rows are merged into ``BENCH_decision.json`` (``fleet`` + ``fleet_budget``)
+next to the fig5/fit/decision rows; CI uploads the JSON as an artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+try:
+    from benchmarks.fig5_timing import merge_bench_json
+except ImportError:                      # run as a script from benchmarks/
+    from fig5_timing import merge_bench_json
+from repro.core import model as enel_model
+from repro.core.graph import summary_node
+from repro.core.service import DecisionService
+from repro.dataflow import FleetCampaign, JobExperiment
+from repro.dataflow.runner import _component_nodes, _future_nodes, _to_graph
+
+JOB_CYCLE = ("lr", "mpc", "kmeans", "gbt")
+MAX_BUCKETS = 12          # bucket-ladder bound for the 4-job mini-campaign
+
+
+def _decision_context(exp: JobExperiment) -> Dict:
+    """The runner's mid-run decision kwargs (component 0 finished — the
+    largest sweep of the job), mirroring fig5's measure_decision."""
+    job = exp.job
+    builder = lambda ci, a, z, pr: _to_graph(
+        _future_nodes(exp.encoder, job, ci, a, z), pr, ci)
+    comp = exp.sim.run_component(job, 0, clock=0.0, start_scaleout=8,
+                                 end_scaleout=8, inject_failures=False,
+                                 failures_log=[])
+    summ = summary_node(_component_nodes(exp.encoder, job, comp), name="P0")
+    return dict(graph_builder=builder, next_comp=1,
+                n_components=job.n_components, elapsed=comp.runtime,
+                current_scaleout=8, target_runtime=exp.target,
+                current_summary=summ)
+
+
+def build_base_experiments(profile_runs: int = 3) -> List[JobExperiment]:
+    exps = []
+    for i, key in enumerate(JOB_CYCLE):
+        exp = JobExperiment(key, seed=i)
+        exp.profile(profile_runs)
+        exps.append(exp)
+    return exps
+
+
+def measure_fleet(base_exps: List[JobExperiment], sizes=(1, 8, 32),
+                  repeats: int = 7) -> List[Dict]:
+    """decisions/sec: sequential per-job recommend vs batched service."""
+    service = DecisionService()
+    contexts = [(exp, _decision_context(exp)) for exp in base_exps]
+    rows = []
+    for size in sizes:
+        fleet = [contexts[i % len(contexts)] for i in range(size)]
+        for _ in range(2):           # untimed rounds: jit warmup + settling
+            for exp, kw in fleet[:len(contexts)]:
+                exp.enel.recommend(**kw)
+            service.decide(
+                [exp.enel.prepare_request(**kw) for exp, kw in fleet])
+        seq_t, bat_t = [], []
+        for _ in range(repeats):
+            t0 = time.time()
+            for exp, kw in fleet:
+                exp.enel.recommend(**kw)
+            seq_t.append(time.time() - t0)
+            t0 = time.time()
+            service.decide(
+                [exp.enel.prepare_request(**kw) for exp, kw in fleet])
+            bat_t.append(time.time() - t0)
+        seq, bat = float(np.median(seq_t)), float(np.median(bat_t))
+        rows.append({
+            "fleet_size": size,
+            "sequential_dec_per_s": size / seq,
+            "batched_dec_per_s": size / bat,
+            "speedup": seq / bat,
+            "sequential_ms_per_decision": seq / size * 1e3,
+            "batched_ms_per_decision": bat / size * 1e3,
+        })
+    return rows
+
+
+def measure_budget(adaptive_runs: int = 2,
+                   profile_runs: int = 3) -> Dict:
+    """Compile-count budget: a fresh 4-job mini-campaign through the fleet
+    service must compile at most once per visited shape-bucket key."""
+    enel_model.reset_trace_counts()
+    exps = [JobExperiment(key, seed=10 + i)
+            for i, key in enumerate(JOB_CYCLE)]
+    campaign = FleetCampaign(exps)
+    campaign.profile(profile_runs)
+    visited = set()
+    for exp in exps:                      # individually: J=1 dispatches
+        for _ in range(adaptive_runs):
+            gen = exp.adaptive_run_gen("enel", False)
+            try:
+                req = next(gen)
+                while True:
+                    visited.add(req.bucket_key)
+                    req = gen.send(exp.service.decide([req])[0])
+            except StopIteration:
+                pass
+    compiles = enel_model.trace_count("fleet_sweep")
+    return {"adaptive_runs_per_job": adaptive_runs,
+            "visited_buckets": len(visited),
+            "fleet_sweep_compiles": compiles,
+            "bucket_bound": MAX_BUCKETS,
+            "decisions": sum(st.decide_calls for e in exps
+                             for st in e.stats if st.kind == "enel")}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="1,8,32")
+    ap.add_argument("--repeats", type=int, default=7)
+    ap.add_argument("--profile-runs", type=int, default=3)
+    ap.add_argument("--adaptive-runs", type=int, default=2)
+    ap.add_argument("--out", default="BENCH_decision.json")
+    args = ap.parse_args(argv)
+    sizes = tuple(int(s) for s in args.sizes.split(","))
+
+    # budget FIRST: it must observe a cold jit cache — running the fleet
+    # throughput sweep beforehand would prewarm bucket compiles and hide
+    # regressions from the trace counter
+    budget = measure_budget(args.adaptive_runs, args.profile_runs)
+    print(f"budget,buckets={budget['visited_buckets']},"
+          f"compiles={budget['fleet_sweep_compiles']},"
+          f"decisions={budget['decisions']},bound={budget['bucket_bound']}")
+
+    base = build_base_experiments(args.profile_runs)
+    fleet_rows = measure_fleet(base, sizes, args.repeats)
+    for r in fleet_rows:
+        print(f"fleet,size={r['fleet_size']},"
+              f"seq={r['sequential_dec_per_s']:.1f}/s,"
+              f"batched={r['batched_dec_per_s']:.1f}/s,"
+              f"speedup={r['speedup']:.2f}x")
+
+    merge_bench_json(args.out, {"fleet": fleet_rows, "fleet_budget": budget})
+    print(f"wrote {os.path.abspath(args.out)}")
+
+    ok = True
+    if budget["fleet_sweep_compiles"] > budget["visited_buckets"]:
+        print(f"FAIL: {budget['fleet_sweep_compiles']} compiles > "
+              f"{budget['visited_buckets']} visited buckets "
+              "(recompilation within a bucket)")
+        ok = False
+    if budget["visited_buckets"] > MAX_BUCKETS:
+        print(f"FAIL: campaign visited {budget['visited_buckets']} buckets "
+              f"> ladder bound {MAX_BUCKETS}")
+        ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,10 +10,13 @@ from repro.core.graph import (ComponentGraph, NodeAttrs, TrainingCache,
                               summary_node)
 from repro.core.model import forward, forward_batch, init_enel, n_params
 from repro.core.scaling import EnelScaler
+from repro.core.service import (DecisionRequest, DecisionResult,
+                                DecisionService)
 from repro.core.training import EnelTrainer, enel_loss
 
 __all__ = [
-    "BellModel", "ComponentGraph", "EllisScaler", "EnelScaler", "EnelTrainer",
+    "BellModel", "ComponentGraph", "DecisionRequest", "DecisionResult",
+    "DecisionService", "EllisScaler", "EnelScaler", "EnelTrainer",
     "NodeAttrs", "TrainingCache", "binarizer", "build_graph",
     "embed_properties",
     "encode", "encode_properties", "encode_property", "enel_loss", "forward",

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import functools
 import os
+from collections import Counter
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -58,6 +59,26 @@ def set_graph_prop_kernel(enabled: bool) -> None:
 
 def graph_prop_kernel_enabled(override: Optional[bool] = None) -> bool:
     return _USE_GRAPH_PROP_KERNEL if override is None else bool(override)
+
+
+# -------------------------------------------------------------- trace counter
+# Every (re)compilation of a counted jit traces its Python body once, so a
+# plain counter bumped inside the function IS a compile counter.  The fleet
+# benchmark asserts a campaign-level budget against these (shape bucketing
+# exists precisely to keep them bounded).
+TRACE_COUNTS: Counter = Counter()
+
+
+def record_trace(name: str) -> None:
+    TRACE_COUNTS[name] += 1
+
+
+def trace_count(name: str) -> int:
+    return TRACE_COUNTS[name]
+
+
+def reset_trace_counts() -> None:
+    TRACE_COUNTS.clear()
 
 
 def _mlp_init(key, dims):
@@ -238,17 +259,16 @@ def predict_total_runtime(params: Dict, graphs: Dict,
 
 
 # ------------------------------------------------------- candidate sweep jit
-def _sweep_impl(params, base, h_onehot, deltas, use_kernel, levels):
-    """Assemble all (candidate x component) graphs from template + deltas on
-    device and evaluate them in one fused batch.  Shapes:
+def assemble_sweep_batch(base, h_onehot, deltas) -> Dict[str, jax.Array]:
+    """Template + per-candidate deltas -> flat stacked (C*K, N, ...) batch.
+
+    Shapes:
 
       base[...]           (K, N, ...)   candidate-invariant template
       h_onehot            (K, N)        H-summary slot indicator
       deltas["a_raw"|"z_raw"|"r"|"metrics_valid"]   (C, K, N)
       deltas["h_context"] (C, K, CTX)   per-candidate H-node context
       deltas["h_metrics"] (C, K, M)     per-candidate H-node metrics
-
-    Returns per-component totals (C, K).
     """
     c, k = deltas["a_raw"].shape[:2]
     n = base["mask"].shape[-1]
@@ -266,7 +286,16 @@ def _sweep_impl(params, base, h_onehot, deltas, use_kernel, levels):
         "mask": jnp.broadcast_to(base["mask"][None], (c, k, n)),
         "is_summary": jnp.broadcast_to(base["is_summary"][None], (c, k, n)),
     }
-    flat = {key: v.reshape((c * k,) + v.shape[2:]) for key, v in batch.items()}
+    return {key: v.reshape((c * k,) + v.shape[2:]) for key, v in batch.items()}
+
+
+def _sweep_impl(params, base, h_onehot, deltas, use_kernel, levels):
+    """Assemble all (candidate x component) graphs from template + deltas on
+    device and evaluate them in one fused batch -> per-component totals
+    (C, K)."""
+    record_trace("sweep_per_component")
+    c, k = deltas["a_raw"].shape[:2]
+    flat = assemble_sweep_batch(base, h_onehot, deltas)
     total = forward_stacked(params, flat, use_kernel=use_kernel, levels=levels)
     return total["total_runtime"].reshape(c, k)
 
@@ -288,3 +317,99 @@ def sweep_per_component(params: Dict, base: Dict, h_onehot, deltas,
     """Jitted batched candidate sweep -> per-component totals (C, K)."""
     return _sweep_fn()(params, base, h_onehot, deltas,
                        graph_prop_kernel_enabled(use_kernel), levels)
+
+
+# ---------------------------------------------------- sparse-edge sweep engine
+# The component DAGs are near-chains: a graph holds at most a handful of real
+# edges, yet the dense engine evaluates f3/f4 on all N x N node pairs and
+# masks the rest away.  The fleet decision service instead gathers the few
+# real (dst, src) pairs into padded (B, E) edge lists and runs eqs. 6-7 with
+# segment reductions — identical math on the real edges (the dense path's
+# masked pairs contribute exact zeros), at E/N^2 of the pair work.
+
+def sweep_sparse_totals(params: Dict, flat: Dict, edge_dst: jax.Array,
+                        edge_src: jax.Array, edge_valid: jax.Array,
+                        levels: int = MAX_LEVELS) -> jax.Array:
+    """Total predicted runtime per graph of a flat stacked batch, sparse.
+
+    ``flat`` holds (B, N, ...) graph arrays (``adj`` unused); ``edge_dst`` /
+    ``edge_src`` / ``edge_valid`` are (B, E) padded edge lists (j -> i edges
+    as (dst=i, src=j)).  Returns (B,) totals equal (up to float summation
+    order) to ``forward_stacked(...)["total_runtime"]`` on the same graphs.
+    """
+    b, n = flat["mask"].shape
+    a_vec = scaleout_vec(flat["a_raw"])
+    z_vec = scaleout_vec(flat["z_raw"])
+    x = jnp.concatenate([a_vec, flat["context"], z_vec], axis=-1)
+    bi = jnp.arange(b)[:, None]
+    # Scatter-free edge->node reduction: XLA CPU lowers segment ops to
+    # serial scatters, so edge->node sums/maxes run as one-hot
+    # broadcast-multiply-sums over the (small) padded edge axis instead;
+    # node->edge reads stay row gathers.
+    oh_dst = (edge_dst[..., None] == jnp.arange(n)) & edge_valid[..., None]
+    oh_dst_f = jnp.where(oh_dst, 1.0, 0.0)               # (B, E, N)
+
+    # eq.6 on real edges only: masked softmax over each node's predecessors
+    xe = jnp.concatenate([x[bi, edge_dst], x[bi, edge_src]], axis=-1)
+    h3 = _mlp(params["f3"], xe)                          # (B, E, EDGE_DIM)
+    logits = jnp.einsum("bef,f->be", jax.nn.leaky_relu(h3, 0.1),
+                        params["attn_a"])
+    lmax = jnp.max(jnp.where(oh_dst, logits[..., None], -jnp.inf),
+                   axis=1)                               # (B, N)
+    lmax = jnp.where(jnp.isfinite(lmax), lmax, 0.0)      # no-pred nodes
+    lm_e = jnp.take_along_axis(lmax, edge_dst, axis=1)
+    w = jnp.where(edge_valid, jnp.exp(logits - lm_e), 0.0)
+    den = (oh_dst_f * w[..., None]).sum(axis=1)          # (B, N)
+    den_e = jnp.take_along_axis(den, edge_dst, axis=1)
+    e = w / jnp.where(den_e > 0, den_e, 1.0)
+
+    # eq.7 level-synchronous propagation via per-edge messages
+    w0, b0 = params["f4"][0]["w"], params["f4"][0]["b"]
+    pre_h = h3 @ w0[:EDGE_DIM]                           # (B, E, HIDDEN)
+    w_m = w0[EDGE_DIM:]
+    f4_tail = params["f4"][1:]
+    m_obs, valid = flat["metrics"], flat["metrics_valid"]
+
+    def level_step(_, m_cur):
+        mj = jnp.where(valid[..., None], m_obs, m_cur)   # (B, N, M)
+        hidden = jax.nn.leaky_relu(pre_h + mj[bi, edge_src] @ w_m + b0, 0.1)
+        msg = _mlp(f4_tail, hidden)                      # (B, E, M)
+        m_prop = (oh_dst_f[..., None] *
+                  (e[..., None] * msg)[:, :, None, :]).sum(axis=1)
+        return jnp.where(valid[..., None], m_obs, m_prop)
+
+    m_hat = jax.lax.fori_loop(0, levels, level_step, m_obs)
+
+    # eqs. 3-5 readout (per node; eq.5 max-over-predecessors via segment_max)
+    m_used = jnp.where(valid[..., None], m_obs, m_hat)
+    f1_in = jnp.concatenate([flat["context"], m_used, a_vec, z_vec,
+                             flat["r"][..., None]], axis=-1)
+    o_hat = _mlp(params["f1"], f1_in)[..., 0]
+    f2_in = jnp.concatenate([flat["context"], m_used, z_vec,
+                             o_hat[..., None]], axis=-1)
+    t_hat = jax.nn.softplus(_mlp(params["f2"], f2_in)[..., 0])
+
+    real_node = flat["mask"] & ~flat["is_summary"]
+    t_node = jnp.where(real_node, t_hat, 0.0)
+    oh_real = oh_dst & ~flat["is_summary"][bi, edge_src, None]
+
+    def acc_step(_, tt):
+        best = jnp.max(jnp.where(oh_real, tt[bi, edge_src, None], 0.0),
+                       axis=1)                           # no-pred nodes -> 0
+        return t_node + best
+
+    tt_hat = jax.lax.fori_loop(0, levels, acc_step, t_node)
+    return jnp.max(jnp.where(real_node, tt_hat, 0.0), axis=-1)
+
+
+# ------------------------------------------------------------ on-device pick
+def pick_candidate(candidates: jax.Array, cand_valid: jax.Array,
+                   totals: jax.Array, target: jax.Array) -> jax.Array:
+    """Device-side :meth:`EnelScaler._pick`: index of the smallest compliant
+    candidate scale-out, else the least-violating one.  ``candidates`` must
+    be ascending over the valid entries (argmin then matches the host pick's
+    first-of-min tie-breaking)."""
+    feasible = cand_valid & (totals <= target)
+    idx_feasible = jnp.argmin(jnp.where(feasible, candidates, jnp.inf))
+    idx_min = jnp.argmin(jnp.where(cand_valid, totals, jnp.inf))
+    return jnp.where(feasible.any(), idx_feasible, idx_min)

@@ -19,7 +19,11 @@ for benchmarking and as a numerical reference.
 Builder contract for the batched path: ``a``/``z`` may flow *unchanged* into
 node start/end scale-outs (identity only — derived values like (a+z)/2 keep
 the template's base value), and time fractions may depend on ``a``/``z``
-only through the predicate ``a == z``.  Node contexts are treated as
+only through the predicate ``a == z``.  The builder must also be
+*structurally deterministic*: for a fixed (component index, predecessor
+count) the node count, edge wiring, a/z slot wiring and time-fraction
+pattern may not change between calls (node attributes like contexts may) —
+the probe that discovers the wiring runs once per key and is cached.  Node contexts are treated as
 candidate-invariant: the template is built once at the current scale-out, so
 a builder that derives context from ``z`` (e.g. task counts) is evaluated
 with the current-scale-out context for every candidate — a deliberate
@@ -29,17 +33,20 @@ when exact per-candidate contexts are required.
 from __future__ import annotations
 
 import dataclasses
-from collections import defaultdict
+from collections import OrderedDict, defaultdict
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bell import BellModel, initial_scaleout
 from repro.core.graph import (CTX_DIM, N_METRICS, ComponentGraph, NodeAttrs,
-                              SWEEP_KEYS, SweepTemplate,
+                              SWEEP_KEYS, SweepTemplate, bucket_sweep,
                               historical_summaries_batch, historical_summary,
-                              propagation_depth, summary_node)
+                              propagation_depth, summary_node, sweep_edge_list)
+from repro.core.model import pick_candidate
+from repro.core.service import DecisionRequest, DecisionResult
 from repro.core.training import EnelTrainer
 
 # graph_builder(comp_idx, a, z, predecessors) -> ComponentGraph with
@@ -65,12 +72,19 @@ class _TemplateDeviceCache:
     per-key host diff re-ships ONLY the arrays whose values changed — the
     small per-candidate deltas are still rebuilt and shipped every decision
     (they are donated to the sweep jit off-CPU, so they must be fresh).
+
+    The cache is a bounded LRU over keys (default 8 slots) so a long
+    multi-job campaign cannot grow device memory without limit; with shape
+    bucketing a whole campaign visits only a handful of keys anyway.
     """
 
-    def __init__(self):
-        self._slots: Dict[Tuple[int, int, int], Tuple[Dict, Dict]] = {}
+    def __init__(self, max_slots: int = 8):
+        self.max_slots = max_slots
+        self._slots: "OrderedDict[Tuple[int, int, int], Tuple[Dict, Dict]]" \
+            = OrderedDict()
         self.transfers = 0          # device uploads performed
         self.skips = 0              # uploads avoided by the host diff
+        self.evictions = 0          # LRU slots dropped
 
     def adopt(self, template: SweepTemplate, n_candidates: int
               ) -> SweepTemplate:
@@ -85,7 +99,11 @@ class _TemplateDeviceCache:
             self._slots[key] = ({kk: v.copy() for kk, v in host_new.items()},
                                 dev)
             self.transfers += len(host_new)
+            while len(self._slots) > self.max_slots:
+                self._slots.popitem(last=False)
+                self.evictions += 1
         else:
+            self._slots.move_to_end(key)
             host, dev = slot
             for kk, v in host_new.items():
                 if np.array_equal(host[kk], v):
@@ -94,11 +112,21 @@ class _TemplateDeviceCache:
                 dev[kk] = jnp.asarray(v)
                 host[kk] = v.copy()
                 self.transfers += 1
-            self._slots[key] = (host, dev)
         _, dev = self._slots[key]
         return dataclasses.replace(
             template, base={kk: dev[kk] for kk in template.base},
             h_onehot=dev["__h_onehot__"])
+
+
+# one device-side reduction + compliant pick over the sweep output; the
+# host then fetches (picked index, per-candidate totals) in a single
+# transfer instead of one float() sync per candidate
+def _totals_pick_impl(per_comp, cand, cand_valid, elapsed, target):
+    totals = per_comp.sum(axis=1) + elapsed
+    return pick_candidate(cand, cand_valid, totals, target), totals
+
+
+_totals_pick = jax.jit(_totals_pick_impl)
 
 
 class EnelScaler:
@@ -113,10 +141,34 @@ class EnelScaler:
         # first-component (scaleout, runtime) pairs for Bell initial alloc
         self.first_component_history: List[Tuple[float, float]] = []
         # last sweep diagnostics: candidates list + (C, K) per-component preds
+        # (held as a DecisionResult — device-resident, transferred lazily)
         self.last_candidates: List[int] = []
-        self.last_per_component: Optional[np.ndarray] = None
+        self._last_result: Optional[DecisionResult] = None
         # device-resident template arrays reused across decision points
         self.template_cache = _TemplateDeviceCache()
+        # probe-derived structural masks per (comp idx, #predecessors): the
+        # A/Z probe only reveals which node slots track the builder's a/z
+        # arguments and the a != z time fractions — structural facts that a
+        # builder (already bound to the identity-only contract above) keeps
+        # fixed per component, so one probe per key serves the whole campaign
+        self._probe_cache: Dict[Tuple[int, int], Tuple] = {}
+        # identity-stable request constants (edge lists, candidate arrays):
+        # reusing the SAME ndarray objects across decisions lets the service
+        # skip re-stacking them when nothing changed
+        self._edge_cache: Dict[Tuple[int, int, int], Tuple] = {}
+        self._cand_cache: Dict[Tuple, Tuple[np.ndarray, np.ndarray]] = {}
+
+    @property
+    def last_per_component(self) -> Optional[np.ndarray]:
+        """(C, K) per-component predictions of the last sweep (lazy fetch)."""
+        if self._last_result is None:
+            return None
+        return self._last_result.per_component
+
+    def _note_sweep(self, candidates: Sequence[int],
+                    result: DecisionResult) -> None:
+        self.last_candidates = list(candidates)
+        self._last_result = result
 
     # --------------------------------------------------------------- history
     def record_component(self, comp_idx: int, nodes: Sequence[NodeAttrs],
@@ -159,7 +211,7 @@ class EnelScaler:
         s_now = float(current_scaleout)
 
         base_graphs: List[ComponentGraph] = []
-        probe_graphs: List[ComponentGraph] = []
+        probes: List[Tuple] = []    # (a==A, a==Z, z==A, z==Z, r) per component
         hists: Dict[int, List[NodeAttrs]] = {}
         for k in remaining:
             preds: List[NodeAttrs] = []
@@ -174,7 +226,15 @@ class EnelScaler:
                     start_scaleout=1.0, end_scaleout=1.0, is_summary=True))
                 hists[k] = hist
             base_graphs.append(graph_builder(k, s_now, s_now, list(preds)))
-            probe_graphs.append(graph_builder(k, A_PROBE, Z_PROBE, list(preds)))
+            probe_key = (k, len(preds))
+            probe = self._probe_cache.get(probe_key)
+            if probe is None:
+                pg = graph_builder(k, A_PROBE, Z_PROBE, list(preds))
+                probe = (pg.a_raw == A_PROBE, pg.a_raw == Z_PROBE,
+                         pg.z_raw == A_PROBE, pg.z_raw == Z_PROBE,
+                         pg.r.copy())
+                self._probe_cache[probe_key] = probe
+            probes.append(probe)
 
         base = {key: np.stack([getattr(g, key) for g in base_graphs])
                 for key in SWEEP_KEYS}
@@ -186,14 +246,14 @@ class EnelScaler:
                     h_onehot[ki, g.names.index(H_SLOT)] = 1.0
                 else:                    # builder dropped the pred: no H delta
                     del hists[remaining[ki]]
-        pa = np.stack([g.a_raw for g in probe_graphs])
-        pz = np.stack([g.z_raw for g in probe_graphs])
         template = SweepTemplate(
             base=base, h_onehot=h_onehot,
-            a_follows_a=pa == A_PROBE, a_follows_z=pa == Z_PROBE,
-            z_follows_a=pz == A_PROBE, z_follows_z=pz == Z_PROBE,
+            a_follows_a=np.stack([p[0] for p in probes]),
+            a_follows_z=np.stack([p[1] for p in probes]),
+            z_follows_a=np.stack([p[2] for p in probes]),
+            z_follows_z=np.stack([p[3] for p in probes]),
             r_eq=base["r"].copy(),
-            r_neq=np.stack([g.r for g in probe_graphs]),
+            r_neq=np.stack([p[4] for p in probes]),
             comp_ids=remaining,
             levels=max(propagation_depth(g.adj, g.mask)
                        for g in base_graphs) or 1)
@@ -248,12 +308,85 @@ class EnelScaler:
             n_components=n_components, current_scaleout=current_scaleout,
             candidates=candidates, current_summary=current_summary)
         template = self.template_cache.adopt(template, len(candidates))
-        per_comp = self.trainer.predict_sweep(template, deltas)    # (C, K)
-        self.last_candidates = list(candidates)
-        self.last_per_component = per_comp
-        totals = {s: elapsed + float(per_comp[i].sum())
-                  for i, s in enumerate(candidates)}
-        return self._pick(candidates, totals, target_runtime)
+        per_dev = self.trainer.predict_sweep_device(template, deltas)  # (C, K)
+        cand_arr = np.array(candidates, np.float32)
+        idx_dev, totals_dev = _totals_pick(
+            per_dev, cand_arr, np.ones(len(candidates), bool),
+            np.float32(elapsed), np.float32(target_runtime))
+        # single host transfer: the pick + the per-candidate totals
+        idx, totals_np = jax.device_get((idx_dev, totals_dev))
+        totals = {s: float(totals_np[i]) for i, s in enumerate(candidates)}
+        best = candidates[int(idx)]
+        self._note_sweep(candidates, DecisionResult(
+            scaleout=best, predicted=totals[best], totals=totals,
+            per_component_dev=per_dev, n_candidates=per_dev.shape[0],
+            n_components=per_dev.shape[1]))
+        return best, totals[best], totals
+
+    # ------------------------------------------------- fleet decision service
+    def prepare_request(self, *, graph_builder: GraphBuilder, next_comp: int,
+                        n_components: int, elapsed: float,
+                        current_scaleout: int, target_runtime: float,
+                        current_summary: Optional[NodeAttrs] = None
+                        ) -> Optional[DecisionRequest]:
+        """Build this job's pending decision as a shape-bucketed request for
+        :class:`repro.core.service.DecisionService`.
+
+        The sweep is assembled exactly as :meth:`recommend` would, then
+        padded to the fixed shape ladders (padded components read out as
+        exactly 0 and padded candidates are masked from the pick), the real
+        edges are gathered for the sparse engine, and the template base
+        arrays are swapped for the device-resident cache copies.  Returns
+        ``None`` when there is nothing left to decide.
+        """
+        candidates = self.candidate_scaleouts(current_scaleout)
+        if next_comp >= n_components:
+            return None
+        template, deltas = self.build_sweep(
+            graph_builder=graph_builder, next_comp=next_comp,
+            n_components=n_components, current_scaleout=current_scaleout,
+            candidates=candidates, current_summary=current_summary)
+        template, deltas, (c_real, k_real) = bucket_sweep(template, deltas)
+        c_b = deltas["a_raw"].shape[0]
+        # keyed by the REAL remaining-component count too: decision points
+        # sharing a K rung but differing in real adj/mask must not thrash
+        # one slot (identity-stable edges keep the service stack memo warm)
+        ekey = (k_real,) + template.base["mask"].shape
+        cached = self._edge_cache.get(ekey)
+        if cached is not None and \
+                np.array_equal(cached[0], template.base["adj"]) and \
+                np.array_equal(cached[1], template.base["mask"]):
+            edge_dst, edge_src, edge_valid = cached[2]
+        else:
+            edges = sweep_edge_list(template.base)
+            self._edge_cache[ekey] = (template.base["adj"].copy(),
+                                      template.base["mask"].copy(), edges)
+            edge_dst, edge_src, edge_valid = edges
+        template = self.template_cache.adopt(template, c_b)
+        ckey = (c_b,) + tuple(candidates)
+        if ckey in self._cand_cache:
+            cand_arr, cand_valid = self._cand_cache[ckey]
+        else:
+            cand_arr = np.full(c_b, candidates[-1], np.float32)
+            cand_arr[:c_real] = candidates
+            cand_valid = np.zeros(c_b, bool)
+            cand_valid[:c_real] = True
+            self._cand_cache[ckey] = (cand_arr, cand_valid)
+        return DecisionRequest(
+            params=self.trainer.params, base=template.base,
+            h_onehot=template.h_onehot, deltas=deltas, edge_dst=edge_dst,
+            edge_src=edge_src, edge_valid=edge_valid, candidates=cand_arr,
+            cand_valid=cand_valid, elapsed=float(elapsed),
+            target=float(target_runtime), levels=template.levels,
+            candidate_list=list(candidates), n_components=k_real)
+
+    def apply_decision(self, request: DecisionRequest,
+                       result: DecisionResult
+                       ) -> Tuple[int, float, Dict[int, float]]:
+        """Record a service decision's diagnostics; returns the same
+        (scaleout, predicted_total, totals) triple as :meth:`recommend`."""
+        self._note_sweep(request.candidate_list, result)
+        return result.scaleout, result.predicted, result.totals
 
     def recommend_pergraph(self, *, graph_builder: GraphBuilder,
                            next_comp: int, n_components: int, elapsed: float,

@@ -1,0 +1,208 @@
+"""Fleet-scale decision service: shape-bucketed, cross-job batched sweeps.
+
+One rescaling decision is a (template, deltas) candidate sweep (see
+``core/scaling.py``).  This module turns decisions into a batched,
+recompilation-free service:
+
+* every request arrives padded to the fixed shape ladders of
+  :func:`repro.core.graph.bucket_sweep`, so the whole fleet shares a handful
+  of jit shapes instead of one per exact sweep;
+* requests with the same bucket key are stacked along a new job axis J
+  (per-request model parameters included — each tenant keeps its own model)
+  and evaluated in ONE jit dispatch, vmapped over the existing sweep
+  assembly + the sparse-edge engine (:func:`~repro.core.model.sweep_sparse_totals`);
+* the compliant-scale-out pick runs on device
+  (:func:`~repro.core.model.pick_candidate`); the host fetches the picked
+  indices and per-candidate totals in a single transfer, and the (J, C, K)
+  per-component diagnostics stay on device until someone asks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict, defaultdict
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import ladder_bucket
+from repro.core.model import (assemble_sweep_batch, pick_candidate,
+                              record_trace, sweep_sparse_totals)
+
+JOB_LADDER = (1, 2, 4, 8, 16, 32)       # job axis J (pad by repeating a row)
+
+
+def _job_bucket(j: int) -> int:
+    return ladder_bucket(j, JOB_LADDER)
+
+
+def _stack_leaves(*xs):
+    """Host leaves: one np.stack + one upload; device leaves: jnp.stack."""
+    if isinstance(xs[0], np.ndarray):
+        return jnp.asarray(np.stack(xs))
+    return jnp.stack(xs)
+
+
+@dataclasses.dataclass
+class DecisionRequest:
+    """One job's pending rescaling decision, already shape-bucketed.
+
+    ``base``/``h_onehot`` may be device arrays (the scaler's template cache
+    keeps them resident across decision points); ``deltas`` and the edge
+    lists are fresh host arrays every decision.
+    """
+    params: Dict                      # this tenant's model parameters
+    base: Dict                        # (K, N, ...) template arrays
+    h_onehot: np.ndarray              # (K, N)
+    deltas: Dict[str, np.ndarray]     # (C, K, ...)
+    edge_dst: np.ndarray              # (K, E) int32
+    edge_src: np.ndarray              # (K, E) int32
+    edge_valid: np.ndarray            # (K, E) bool
+    candidates: np.ndarray            # (C,) float32, padded ascending
+    cand_valid: np.ndarray            # (C,) bool
+    elapsed: float
+    target: float
+    levels: int
+    candidate_list: List[int]         # the real candidate scale-outs
+    n_components: int                 # real K (pre-padding)
+
+    @property
+    def bucket_key(self):
+        k, n = self.h_onehot.shape
+        return (len(self.candidates), k, n, self.edge_dst.shape[1],
+                self.levels)
+
+
+class DecisionResult:
+    """Pick + totals (fetched in one transfer); per-component preds lazy."""
+
+    def __init__(self, scaleout: int, predicted: float,
+                 totals: Dict[int, float], per_component_dev,
+                 n_candidates: int, n_components: int):
+        self.scaleout = scaleout
+        self.predicted = predicted
+        self.totals = totals
+        self._per_dev = per_component_dev       # (C_bucket, K_bucket) device
+        self._shape = (n_candidates, n_components)
+        self._per_np: Optional[np.ndarray] = None
+
+    @property
+    def per_component(self) -> np.ndarray:
+        """(C, K) per-component predictions; device->host on first access."""
+        if self._per_np is None:
+            c, k = self._shape
+            self._per_np = np.asarray(self._per_dev)[:c, :k]
+        return self._per_np
+
+
+def _fleet_impl(params, base, h_onehot, deltas, edge_dst, edge_src,
+                edge_valid, cand, cand_valid, elapsed, target, levels):
+    """vmap over the job axis: assemble + sparse sweep + on-device pick."""
+    record_trace("fleet_sweep")
+
+    def one(p, b, oh, d, ed, es, ev, cd, cv, el, tg):
+        c, k = d["a_raw"].shape[:2]
+        flat = assemble_sweep_batch(b, oh, d)
+        tile = lambda a: jnp.broadcast_to(
+            a[None], (c,) + a.shape).reshape((c * k,) + a.shape[1:])
+        per = sweep_sparse_totals(p, flat, tile(ed), tile(es), tile(ev),
+                                  levels).reshape(c, k)
+        totals = per.sum(axis=1) + el
+        idx = pick_candidate(cd, cv, totals, tg)
+        return idx, totals, per
+
+    return jax.vmap(one)(params, base, h_onehot, deltas, edge_dst, edge_src,
+                         edge_valid, cand, cand_valid, elapsed, target)
+
+
+_fleet_jit = jax.jit(_fleet_impl, static_argnums=(11,))
+
+
+class DecisionService:
+    """Collects concurrent decision requests and dispatches them batched.
+
+    ``decide`` groups requests by bucket key, pads each group to a JOB_LADDER
+    rung along the job axis, evaluates every group in one jit dispatch and
+    fetches each group's picks + totals in a single host transfer.
+    """
+
+    def __init__(self):
+        self.decisions = 0          # requests served
+        self.dispatches = 0         # jit dispatches issued
+        self.batched_away = 0       # dispatches saved vs one-per-request
+        # identity-memoized stacks: params / template-base device arrays /
+        # edge lists are object-stable across decision rounds (the scalers'
+        # caches re-serve the same ndarrays while values are unchanged), so
+        # their (J, ...) stacks are reused instead of re-stacked per round.
+        # LRU-bounded so a long campaign over many bucket/fleet shapes
+        # cannot pin stacked device arrays without limit.
+        self._stack_memo: "OrderedDict[tuple, tuple]" = OrderedDict()
+        self._stack_memo_slots = 64
+
+    def _stack_tree(self, cache_key: tuple, rows, get):
+        trees = [get(r) for r in rows]
+        all_leaves = [jax.tree_util.tree_leaves(t) for t in trees]
+        ids = tuple(id(l) for row in all_leaves for l in row)
+        hit = self._stack_memo.get(cache_key)
+        if hit is not None and hit[0] == ids:
+            self._stack_memo.move_to_end(cache_key)
+            return hit[2]
+        treedef = jax.tree_util.tree_structure(trees[0])
+        stacked = jax.tree_util.tree_unflatten(
+            treedef, [_stack_leaves(*col) for col in zip(*all_leaves)])
+        # keep the leaf refs alive so the memo's ids cannot be recycled
+        self._stack_memo[cache_key] = (ids, all_leaves, stacked)
+        while len(self._stack_memo) > self._stack_memo_slots:
+            self._stack_memo.popitem(last=False)
+        return stacked
+
+    def decide(self, requests: Sequence[DecisionRequest]
+               ) -> List[DecisionResult]:
+        groups: Dict[tuple, List[int]] = defaultdict(list)
+        for i, r in enumerate(requests):
+            groups[r.bucket_key].append(i)
+        results: List[Optional[DecisionResult]] = [None] * len(requests)
+        for key, idxs in groups.items():
+            group = [requests[i] for i in idxs]
+            j_b = _job_bucket(len(group))
+            rows = group + [group[-1]] * (j_b - len(group))
+            stack = lambda get: jax.tree_util.tree_map(
+                _stack_leaves, *[get(r) for r in rows])
+            picked, totals, per = _fleet_jit(
+                self._stack_tree((key, j_b, "params"), rows,
+                                 lambda r: r.params),
+                self._stack_tree((key, j_b, "base"), rows, lambda r: r.base),
+                self._stack_tree((key, j_b, "h_onehot"), rows,
+                                 lambda r: r.h_onehot),
+                stack(lambda r: r.deltas),
+                self._stack_tree((key, j_b, "edge_dst"), rows,
+                                 lambda r: r.edge_dst),
+                self._stack_tree((key, j_b, "edge_src"), rows,
+                                 lambda r: r.edge_src),
+                self._stack_tree((key, j_b, "edge_valid"), rows,
+                                 lambda r: r.edge_valid),
+                self._stack_tree((key, j_b, "candidates"), rows,
+                                 lambda r: r.candidates),
+                self._stack_tree((key, j_b, "cand_valid"), rows,
+                                 lambda r: r.cand_valid),
+                jnp.asarray([r.elapsed for r in rows], jnp.float32),
+                jnp.asarray([r.target for r in rows], jnp.float32),
+                group[0].levels)
+            # ONE host transfer per group: picks + per-candidate totals
+            picked_np, totals_np = jax.device_get((picked, totals))
+            for gi, ri in enumerate(idxs):
+                req = requests[ri]
+                sl = int(picked_np[gi])
+                tot = {s: float(totals_np[gi, ci])
+                       for ci, s in enumerate(req.candidate_list)}
+                results[ri] = DecisionResult(
+                    scaleout=req.candidate_list[sl],
+                    predicted=float(totals_np[gi, sl]), totals=tot,
+                    per_component_dev=per[gi],
+                    n_candidates=len(req.candidate_list),
+                    n_components=req.n_components)
+            self.dispatches += 1
+            self.batched_away += len(group) - 1
+        self.decisions += len(requests)
+        return results

@@ -303,23 +303,28 @@ class EnelTrainer:
         dev = {k: jnp.asarray(v) for k, v in batch.items()}
         return np.asarray(enel_model.predict_total_runtime(self.params, dev))
 
-    def predict_sweep(self, template, deltas: Dict[str, np.ndarray],
-                      use_kernel: bool = None) -> np.ndarray:
-        """Batched candidate-sweep predictions -> (C, K) seconds.
+    def predict_sweep_device(self, template, deltas: Dict[str, np.ndarray],
+                             use_kernel: bool = None) -> jax.Array:
+        """Batched candidate-sweep predictions as a DEVICE (C, K) array.
 
         One device transfer + one jit call per decision: the template's
         (K, N, ...) base arrays and the small (C, K, ...) delta arrays are
-        shipped as-is (exact shapes — the per-job trace count is bounded by
-        the component count x the 2 possible candidate-set sizes) and
-        evaluated via :func:`repro.core.model.sweep_per_component` with the
-        propagation depth lowered to the template DAG's actual depth.
+        shipped as-is and evaluated via
+        :func:`repro.core.model.sweep_per_component` with the propagation
+        depth lowered to the template DAG's actual depth.  No host sync —
+        callers reduce/pick on device and fetch once.
         """
-        n_cand, n_rem = deltas["a_raw"].shape[:2]
         levels = min(enel_model.MAX_LEVELS, max(1, template.levels))
-        per = enel_model.sweep_per_component(
+        return enel_model.sweep_per_component(
             self.params,
             {k: jnp.asarray(v) for k, v in template.base.items()},
             jnp.asarray(template.h_onehot),
             {k: jnp.asarray(np.asarray(v)) for k, v in deltas.items()},
             use_kernel=use_kernel, levels=levels)
+
+    def predict_sweep(self, template, deltas: Dict[str, np.ndarray],
+                      use_kernel: bool = None) -> np.ndarray:
+        """Host (C, K) sweep predictions (reference/tests; one transfer)."""
+        n_cand, n_rem = deltas["a_raw"].shape[:2]
+        per = self.predict_sweep_device(template, deltas, use_kernel)
         return np.asarray(per)[:n_cand, :n_rem]

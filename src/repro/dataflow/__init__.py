@@ -1,11 +1,13 @@
 from repro.dataflow.context import ContextEncoder
+from repro.dataflow.fleet import FleetCampaign
 from repro.dataflow.runner import JobExperiment, RunStats, window_stats
 from repro.dataflow.simulator import ClusterSim, RunRecord, rescale_overhead
 from repro.dataflow.workloads import (DATASETS, JOBS, SCALEOUT_RANGE, JobSpec,
                                       StageSpec, make_multiclass, make_points,
                                       make_vandermonde)
 
-__all__ = ["ClusterSim", "ContextEncoder", "DATASETS", "JOBS", "JobExperiment",
+__all__ = ["ClusterSim", "ContextEncoder", "DATASETS", "FleetCampaign",
+           "JOBS", "JobExperiment",
            "JobSpec", "RunRecord", "RunStats", "SCALEOUT_RANGE", "StageSpec",
            "make_multiclass", "make_points", "make_vandermonde",
            "rescale_overhead", "window_stats"]

@@ -1,0 +1,61 @@
+"""Multi-job fleet campaigns over the shared decision service.
+
+A :class:`FleetCampaign` owns one :class:`~repro.core.service.DecisionService`
+shared by many :class:`~repro.dataflow.runner.JobExperiment`\\ s (four job
+classes x several seeds, the paper's multi-tenant setting).  Each adaptive
+run executes as a generator that yields its pending rescaling decision at
+every component boundary; the campaign interleaves all generators and hands
+EVERY currently-pending request to the service in one call, so same-bucket
+decisions from different jobs ride a single jit dispatch while each job
+still sees its own model's predictions.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.service import DecisionService
+from repro.dataflow.runner import JobExperiment, RunStats
+
+
+class FleetCampaign:
+    """Drive many concurrent job experiments through one decision service."""
+
+    def __init__(self, experiments: Sequence[JobExperiment],
+                 service: Optional[DecisionService] = None):
+        self.service = service or DecisionService()
+        self.experiments = list(experiments)
+        for exp in self.experiments:
+            exp.service = self.service          # single-run calls batch too
+
+    def profile(self, n_runs: int = 10) -> None:
+        for exp in self.experiments:
+            exp.profile(n_runs)
+
+    def adaptive_round(self, method: str = "enel",
+                       inject_failures: bool = False) -> List[RunStats]:
+        """One adaptive run of EVERY experiment, decisions cross-batched.
+
+        All experiments advance to their next decision point; the set of
+        pending requests is decided in one service call (grouped by shape
+        bucket -> one jit dispatch per bucket), and each experiment resumes
+        with its own result.  Returns the per-experiment RunStats in order.
+        """
+        gens = {i: exp.adaptive_run_gen(method, inject_failures)
+                for i, exp in enumerate(self.experiments)}
+        stats: Dict[int, RunStats] = {}
+        pending: Dict[int, object] = {}
+        for i, gen in list(gens.items()):
+            try:
+                pending[i] = next(gen)
+            except StopIteration as stop:       # run without any decision
+                stats[i] = stop.value
+        while pending:
+            ids = list(pending)
+            results = self.service.decide([pending[i] for i in ids])
+            pending = {}
+            for i, result in zip(ids, results):
+                try:
+                    pending[i] = gens[i].send(result)
+                except StopIteration as stop:
+                    stats[i] = stop.value
+        return [stats[i] for i in range(len(self.experiments))]

@@ -5,6 +5,13 @@ Per job: 10 profiling runs (no scaling) -> initial model fit -> adaptive runs
 where the scaler is consulted at every component boundary.  Enel retrains
 from scratch every 5th run and fine-tunes otherwise; Ellis refits its
 per-component model ensemble after every run.
+
+Enel decisions route through a :class:`~repro.core.service.DecisionService`:
+the execution loop is a generator that YIELDS shape-bucketed decision
+requests and receives the service's picks, so a single job drives it with a
+private service (one request per dispatch) while a fleet campaign
+(``repro.dataflow.fleet``) interleaves many jobs and batches all concurrent
+requests into one dispatch per shape bucket.
 """
 from __future__ import annotations
 
@@ -18,6 +25,7 @@ from repro.core.graph import (ComponentGraph, NodeAttrs, build_graph,
                               historical_summary, summary_node)
 from repro.core.scaling import EnelScaler
 from repro.core.ellis import EllisScaler
+from repro.core.service import DecisionService
 from repro.core.training import EnelTrainer
 from repro.dataflow.context import ContextEncoder
 from repro.dataflow.simulator import (ClusterSim, ComponentRecord, RunRecord,
@@ -41,6 +49,10 @@ class RunStats:
     fit_seconds: float = 0.0
     decide_seconds: float = 0.0
     decide_calls: int = 0
+    # sweep-template device-cache traffic during this run (LRU-bounded)
+    cache_transfers: int = 0
+    cache_skips: int = 0
+    cache_evictions: int = 0
 
     @property
     def cvc(self) -> int:
@@ -87,16 +99,29 @@ def _to_graph(nodes: List[NodeAttrs], preds: List[NodeAttrs],
     return build_graph(all_nodes, edges, component_id=comp_idx)
 
 
+def drive(gen, service: DecisionService):
+    """Run a decision generator to completion against a service, answering
+    each yielded :class:`DecisionRequest` with the service's decision."""
+    try:
+        req = next(gen)
+        while True:
+            req = gen.send(service.decide([req])[0])
+    except StopIteration as stop:
+        return stop.value
+
+
 class JobExperiment:
     """Shared environment for one job: simulator, encoder, both scalers."""
 
     def __init__(self, job_key: str, seed: int = 0,
-                 candidate_stride: int = 2):
+                 candidate_stride: int = 2,
+                 service: Optional[DecisionService] = None):
         self.job = JOBS[job_key]
         self.job_key = job_key
         self.sim = ClusterSim(seed=seed)
         self.encoder = ContextEncoder([self.job], seed=seed)
         self.trainer = EnelTrainer(seed=seed, cache_capacity=HISTORY_WINDOW)
+        self.service = service or DecisionService()
         self.enel = EnelScaler(self.trainer, SCALEOUT_RANGE,
                                candidate_stride=candidate_stride)
         self.ellis = EllisScaler(SCALEOUT_RANGE,
@@ -111,9 +136,10 @@ class JobExperiment:
         self._run_idx = 0
 
     # ------------------------------------------------------------ execution
-    def _execute(self, *, scaler: Optional[str], inject_failures: bool,
-                 initial_s: int) -> Tuple[RunRecord, List[ComponentGraph],
-                                          List[int], float, int]:
+    def _execute_gen(self, *, scaler: Optional[str], inject_failures: bool,
+                     initial_s: int):
+        """Generator form of one run: yields Enel decision requests, resumes
+        with the service's :class:`DecisionResult`, returns the run tuple."""
         job = self.job
         run = RunRecord(job.name, self.target or 0.0)
         clock = 0.0
@@ -147,18 +173,22 @@ class JobExperiment:
                     k % self.decision_interval == 0:
                 t0 = time.time()
                 if scaler == "enel":
-                    # batched candidate sweep: template + deltas, one jit
-                    # call.  NOTE: under this engine node contexts are built
-                    # once at the CURRENT scale-out (the z -> n_tasks context
-                    # dependence below is frozen across candidates); only
-                    # a/z/r and H-summary attrs vary per candidate.
+                    # batched candidate sweep: template + deltas, one
+                    # service dispatch (shape-bucketed; batched across jobs
+                    # when a fleet campaign drives the generator).  NOTE:
+                    # under this engine node contexts are built once at the
+                    # CURRENT scale-out (the z -> n_tasks context dependence
+                    # below is frozen across candidates); only a/z/r and
+                    # H-summary attrs vary per candidate.
                     builder = lambda ci, a, z, pr: _to_graph(
                         _future_nodes(self.encoder, job, ci, a, z), pr, ci)
-                    s_new, _, _ = self.enel.recommend(
+                    req = self.enel.prepare_request(
                         graph_builder=builder, next_comp=k + 1,
                         n_components=job.n_components, elapsed=clock,
                         current_scaleout=s, target_runtime=self.target,
                         current_summary=prev_summary)
+                    result = yield req
+                    s_new, _, _ = self.enel.apply_decision(req, result)
                 else:
                     s_new, _ = self.ellis.recommend(
                         next_comp=k + 1, n_components=job.n_components,
@@ -171,6 +201,13 @@ class JobExperiment:
                     s = s_new
                     scaleouts.append(s)
         return run, run_graphs, scaleouts, decide_s, decide_n
+
+    def _execute(self, *, scaler: Optional[str], inject_failures: bool,
+                 initial_s: int) -> Tuple[RunRecord, List[ComponentGraph],
+                                          List[int], float, int]:
+        return drive(self._execute_gen(scaler=scaler,
+                                       inject_failures=inject_failures,
+                                       initial_s=initial_s), self.service)
 
     # ------------------------------------------------------------ profiling
     def profile(self, n_runs: int = 10) -> None:
@@ -198,15 +235,23 @@ class JobExperiment:
 
     # -------------------------------------------------------------- adaptive
     def adaptive_run(self, method: str, inject_failures: bool) -> RunStats:
+        return drive(self.adaptive_run_gen(method, inject_failures),
+                     self.service)
+
+    def adaptive_run_gen(self, method: str, inject_failures: bool):
+        """Generator form of :meth:`adaptive_run` for fleet interleaving."""
         assert self.target is not None, "profile() first"
         job = self.job
+        cache = self.enel.template_cache
+        cache0 = (cache.transfers, cache.skips, cache.evictions)
         # fair initial allocation for both methods (paper §V-B.3): Ellis'
         # per-component models pick the cheapest compliant scale-out
         s0, predicted = self.ellis.recommend(
             next_comp=0, n_components=job.n_components, elapsed=0.0,
             current_scaleout=SCALEOUT_RANGE[0], target_runtime=self.target)
-        run, graphs, scaleouts, decide_s, decide_n = self._execute(
-            scaler=method, inject_failures=inject_failures, initial_s=s0)
+        run, graphs, scaleouts, decide_s, decide_n = yield from \
+            self._execute_gen(scaler=method,
+                              inject_failures=inject_failures, initial_s=s0)
         self.graph_history.extend(graphs)
         # keep the resident ring in sync for BOTH methods so a later Enel
         # scratch retrain sees the full history window
@@ -226,7 +271,10 @@ class JobExperiment:
                       run.violation, predicted=predicted,
                       scaleouts=scaleouts, n_failures=len(run.failures),
                       fit_seconds=fit_s, decide_seconds=decide_s,
-                      decide_calls=decide_n)
+                      decide_calls=decide_n,
+                      cache_transfers=cache.transfers - cache0[0],
+                      cache_skips=cache.skips - cache0[1],
+                      cache_evictions=cache.evictions - cache0[2])
         self.stats.append(st)
         return st
 

@@ -1,0 +1,248 @@
+"""Fleet decision service: shape bucketing, sparse engine, batched dispatch.
+
+The contracts under test:
+
+* padding a sweep to the bucket ladders changes NOTHING — the padded dense
+  sweep equals the unpadded one bit-for-bit on the real JOBS builders;
+* the sparse-edge engine equals the dense engine on random masked DAGs;
+* one batched service dispatch over a multi-job fleet returns exactly the
+  decisions the jobs would get from sequential per-job ``recommend``;
+* the template device cache is a bounded LRU;
+* the on-device pick replicates the host pick's tie-breaking.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import model as enel_model
+from repro.core.graph import (CTX_DIM, N_METRICS, NodeAttrs, SweepTemplate,
+                              bucket_sweep, build_graph, stack_graphs,
+                              summary_node, sweep_edge_list)
+from repro.core.model import pick_candidate, sweep_sparse_totals
+from repro.core.scaling import EnelScaler, _TemplateDeviceCache
+from repro.core.service import DecisionService
+from repro.dataflow import FleetCampaign, JobExperiment
+from repro.dataflow.runner import (_component_nodes, _future_nodes, _to_graph)
+
+
+# --------------------------------------------------------------- fixtures
+FLEET_JOBS = ("lr", "kmeans", "gbt")
+
+
+@pytest.fixture(scope="module")
+def fleet_exps():
+    """Three profiled job experiments (distinct classes) sharing nothing."""
+    exps = []
+    for i, key in enumerate(FLEET_JOBS):
+        exp = JobExperiment(key, seed=20 + i)
+        exp.profile(2)
+        exps.append(exp)
+    return exps
+
+
+def _decision_kwargs(exp):
+    job = exp.job
+    builder = lambda ci, a, z, pr: _to_graph(
+        _future_nodes(exp.encoder, job, ci, a, z), pr, ci)
+    comp = exp.sim.run_component(job, 0, clock=0.0, start_scaleout=8,
+                                 end_scaleout=8, inject_failures=False,
+                                 failures_log=[])
+    summ = summary_node(_component_nodes(exp.encoder, job, comp), name="P0")
+    return dict(graph_builder=builder, next_comp=1,
+                n_components=job.n_components, elapsed=comp.runtime,
+                current_scaleout=8, target_runtime=exp.target,
+                current_summary=summ)
+
+
+# ------------------------------------------------- padded == unpadded (0.0)
+@pytest.mark.parametrize("job_key", ["lr", "mpc", "kmeans", "gbt"])
+def test_bucketed_sweep_matches_unpadded_exactly(job_key):
+    """Dense sweep on ladder-padded template/deltas == unpadded sweep with
+    0.0 deviation, on the real JOBS builders, across K/C shapes that cross
+    the bucket boundaries (incl. exact-rung K and small tails)."""
+    exp = JobExperiment(job_key, seed=7)
+    job = exp.job
+    builder = lambda ci, a, z, pr: _to_graph(
+        _future_nodes(exp.encoder, job, ci, a, z), pr, ci)
+    # a little history so H-summary slots participate too
+    rng = np.random.RandomState(0)
+    for _ in range(4):
+        for k in range(job.n_components):
+            s = float(rng.choice([4, 8, 16, 24, 36]))
+            nodes = _future_nodes(exp.encoder, job, k, s, s)
+            for nd in nodes:
+                nd.metrics = rng.rand(N_METRICS).astype(np.float32)
+                nd.runtime = float(5.0 + rng.rand())
+            exp.enel.record_component(k, nodes, 10.0)
+    n = job.n_components
+    # (next_comp, stride): K crosses rungs (incl. K==rung exactly), C varies
+    cases = [(1, 2), (max(1, n - 12), 2), (n - 4, 2), (n - 1, 2), (1, 8)]
+    for next_comp, stride in cases:
+        exp.enel.candidate_stride = stride
+        candidates = exp.enel.candidate_scaleouts(9)
+        template, deltas = exp.enel.build_sweep(
+            graph_builder=builder, next_comp=next_comp, n_components=n,
+            current_scaleout=9, candidates=candidates)
+        ref = exp.enel.trainer.predict_sweep(template, deltas)
+        padded_t, padded_d, (c_real, k_real) = bucket_sweep(template, deltas)
+        assert padded_d["a_raw"].shape[0] >= c_real
+        assert padded_t.base["mask"].shape[0] >= k_real
+        per = enel_model.sweep_per_component(
+            exp.enel.trainer.params,
+            {k: jnp.asarray(v) for k, v in padded_t.base.items()},
+            jnp.asarray(padded_t.h_onehot),
+            {k: jnp.asarray(v) for k, v in padded_d.items()},
+            use_kernel=False, levels=padded_t.levels)
+        got = np.asarray(per)[:c_real, :k_real]
+        np.testing.assert_array_equal(got, ref)       # 0.0 deviation
+        # padded components must read out EXACTLY 0
+        tail = np.asarray(per)[:, k_real:]
+        np.testing.assert_array_equal(tail, np.zeros_like(tail))
+
+
+# ------------------------------------------------------ sparse == dense
+def _random_graphs(seed, count=7, max_nodes=8):
+    rng = np.random.RandomState(seed)
+    graphs = []
+    for k in range(count):
+        n = rng.randint(1, max_nodes)
+        nodes = [NodeAttrs(
+            f"n{i}", np.tanh(rng.randn(CTX_DIM)).astype(np.float32),
+            rng.rand(N_METRICS).astype(np.float32) if rng.rand() < 0.5
+            else None,
+            float(rng.randint(2, 30)), float(rng.randint(2, 30)),
+            time_fraction=float(0.5 + 0.5 * rng.rand()),
+            is_summary=bool(rng.rand() < 0.3)) for i in range(n)]
+        edges = [(i, j) for j in range(n) for i in range(j)
+                 if rng.rand() < 0.4]
+        graphs.append(build_graph(nodes, edges, k, max_nodes=max_nodes))
+    return graphs
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_sparse_engine_matches_dense(seed):
+    graphs = _random_graphs(seed)
+    batch = stack_graphs(graphs)
+    params = enel_model.init_enel(jax.random.PRNGKey(seed))
+    dense = enel_model.forward_stacked(
+        params, {k: jnp.asarray(v) for k, v in batch.items()},
+        use_kernel=False)["total_runtime"]
+    dst, src, val = sweep_edge_list(batch)
+    sparse = sweep_sparse_totals(
+        params, {k: jnp.asarray(v) for k, v in batch.items()},
+        jnp.asarray(dst), jnp.asarray(src), jnp.asarray(val))
+    np.testing.assert_allclose(np.asarray(sparse), np.asarray(dense),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------- batched dispatch == sequential picks
+def test_service_matches_sequential_recommend(fleet_exps):
+    """3-job fleet: one batched decide == per-job sequential recommend."""
+    service = DecisionService()
+    kwargs = [_decision_kwargs(exp) for exp in fleet_exps]
+    # warm the probe caches so both paths below see identical builder state
+    for exp, kw in zip(fleet_exps, kwargs):
+        exp.enel.recommend(**kw)
+        exp.enel.prepare_request(**kw)
+    sequential, requests = [], []
+    for i, (exp, kw) in enumerate(zip(fleet_exps, kwargs)):
+        # identical encoder RNG draws for both engines' graph builds
+        exp.encoder.rng = np.random.RandomState(1000 + i)
+        sequential.append(exp.enel.recommend(**kw))
+        exp.encoder.rng = np.random.RandomState(1000 + i)
+        requests.append(exp.enel.prepare_request(**kw))
+    results = service.decide(requests)
+    assert service.dispatches >= 1
+    assert service.decisions == len(fleet_exps)
+    for (s_seq, tot_seq, totals_seq), res in zip(sequential, results):
+        assert res.scaleout == s_seq
+        assert set(res.totals) == set(totals_seq)
+        for s in totals_seq:
+            np.testing.assert_allclose(res.totals[s], totals_seq[s],
+                                       rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(res.predicted, tot_seq,
+                                   rtol=1e-4, atol=1e-3)
+
+
+def test_result_per_component_lazy_shape(fleet_exps):
+    exp = fleet_exps[0]
+    kw = _decision_kwargs(exp)
+    req = exp.enel.prepare_request(**kw)
+    res = DecisionService().decide([req])[0]
+    per = res.per_component
+    assert per.shape == (len(req.candidate_list), req.n_components)
+    s, predicted, totals = exp.enel.apply_decision(req, res)
+    assert s == res.scaleout
+    # scaler-side lazy diagnostics mirror the result
+    np.testing.assert_array_equal(exp.enel.last_per_component, per)
+
+
+def test_fleet_campaign_round_batches(fleet_exps):
+    """A campaign round over 3 jobs batches concurrent decisions and yields
+    the same RunStats surface as individual adaptive runs."""
+    campaign = FleetCampaign(fleet_exps)
+    stats = campaign.adaptive_round("enel", inject_failures=False)
+    assert len(stats) == len(fleet_exps)
+    for st, exp in zip(stats, fleet_exps):
+        assert st.kind == "enel" and st.runtime > 0
+        assert st.decide_calls > 0
+        assert st.cache_transfers >= 0 and st.cache_skips >= 0
+        assert exp.stats[-1] is st
+    assert campaign.service.batched_away > 0      # real cross-job batching
+    assert campaign.service.decisions == sum(st.decide_calls for st in stats)
+
+
+# ----------------------------------------------------------- LRU bound
+def _mini_template(k, n=4, seed=0):
+    rng = np.random.RandomState(seed)
+    base = {
+        "context": rng.rand(k, n, CTX_DIM).astype(np.float32),
+        "metrics": rng.rand(k, n, N_METRICS).astype(np.float32),
+        "metrics_valid": np.ones((k, n), bool),
+        "a_raw": np.ones((k, n), np.float32),
+        "z_raw": np.ones((k, n), np.float32),
+        "r": np.ones((k, n), np.float32),
+        "adj": np.zeros((k, n, n), bool),
+        "mask": np.ones((k, n), bool),
+        "is_summary": np.zeros((k, n), bool),
+    }
+    flags = np.zeros((k, n), bool)
+    return SweepTemplate(base=base, h_onehot=np.zeros((k, n), np.float32),
+                         a_follows_a=flags, a_follows_z=flags,
+                         z_follows_a=flags, z_follows_z=flags,
+                         r_eq=base["r"], r_neq=base["r"])
+
+
+def test_template_device_cache_lru_eviction():
+    cache = _TemplateDeviceCache(max_slots=2)
+    for k in (2, 3, 4):
+        cache.adopt(_mini_template(k), n_candidates=6)
+    assert len(cache._slots) == 2
+    assert cache.evictions == 1
+    # re-adopting an evicted key re-uploads (it was dropped)
+    before = cache.transfers
+    cache.adopt(_mini_template(2), n_candidates=6)
+    assert cache.transfers > before
+    assert cache.evictions == 2
+    # touching a live key keeps it resident (LRU order, no new eviction)
+    cache.adopt(_mini_template(2), n_candidates=6)
+    assert cache.evictions == 2
+
+
+# ------------------------------------------------------- device pick parity
+def test_pick_candidate_matches_host_pick():
+    cand = np.array([4, 6, 8, 10, 12, 12], np.float32)
+    valid = np.array([1, 1, 1, 1, 1, 0], bool)
+    for seed in range(30):
+        rng = np.random.RandomState(seed)
+        totals = (rng.rand(6) * 30 + 5).astype(np.float32)
+        target = float(rng.rand() * 40)
+        t_host = {float(s): float(t)
+                  for s, t, v in zip(cand, totals, valid) if v}
+        host_s, _, _ = EnelScaler._pick(
+            sorted(t_host), {s: t_host[s] for s in t_host}, target)
+        idx = int(pick_candidate(jnp.asarray(cand), jnp.asarray(valid),
+                                 jnp.asarray(totals), jnp.asarray(target)))
+        assert valid[idx]
+        assert float(cand[idx]) == host_s
