@@ -24,25 +24,35 @@ from repro.dataflow.runner import HISTORY_WINDOW
 def merge_bench_json(out_path: str, updates: Dict) -> None:
     """Merge section rows into the benchmark JSON without clobbering other
     writers' sections (fig5/fit/decision here vs fleet/fleet_budget from
-    ``benchmarks/fleet_bench.py``)."""
+    ``benchmarks/fleet_bench.py`` vs the scenario-suite sections).
+
+    numpy scalars that leak into rows (e.g. an np.float32 simulator stat)
+    coerce via ``float``; arrays still fail loudly."""
     data = {}
     if os.path.exists(out_path):
         with open(out_path) as f:
             data = json.load(f)
     data.update(updates)
     with open(out_path, "w") as f:
-        json.dump(data, f, indent=2)
+        json.dump(data, f, indent=2, default=float)
 
 
-def measure(job_key: str, seed: int = 0, repeats: int = 3) -> Dict:
+def med_iqr(xs) -> Dict[str, float]:
+    """CPU wall timings here are noisy (see CI flakes): report the median
+    of k >= 5 repeats with the interquartile range instead of mean/std,
+    which a single straggler repeat can dominate."""
+    q1, med, q3 = np.percentile(xs, [25, 50, 75])
+    return {"median": float(med), "iqr": float(q3 - q1)}
+
+
+def measure(job_key: str, seed: int = 0, repeats: int = 5) -> Dict:
     """fit here is the runner's actual online path: a resident fine-tune on
     the newest run's graphs (same content the legacy row restacked).
 
     Deliberately NO warmup, matching how the historical fig5 rows were
-    taken: the first repeat carries any one-off jit compile (hence std ~=
-    mean when `repeats` is small), keeping fit_s_mean comparable across
-    PRs.  The `fit` rows from :func:`measure_fit` are the steady-state
-    (warmed) comparison."""
+    taken: the first repeat carries any one-off jit compile — which is
+    exactly why these rows are medians: the median of k >= 5 repeats sits
+    in the warmed steady state while the IQR exposes the compile outlier."""
     exp = JobExperiment(job_key, seed=seed)
     exp.profile(4)
     fit_times, pred_times = [], []
@@ -55,19 +65,20 @@ def measure(job_key: str, seed: int = 0, repeats: int = 3) -> Dict:
         t0 = time.time()
         exp.trainer.predict(graphs)
         pred_times.append(time.time() - t0)
+    fit, pred = med_iqr(fit_times), med_iqr(pred_times)
     return {"job": job_key, "n_graphs": n_comp,
-            "fit_s_mean": float(np.mean(fit_times)),
-            "fit_s_std": float(np.std(fit_times)),
-            "predict_s_mean": float(np.mean(pred_times))}
+            "fit_s_median": fit["median"], "fit_s_iqr": fit["iqr"],
+            "predict_s_median": pred["median"],
+            "predict_s_iqr": pred["iqr"]}
 
 
-def measure_fit(job_key: str, seed: int = 0, repeats: int = 3) -> Dict:
+def measure_fit(job_key: str, seed: int = 0, repeats: int = 5) -> Dict:
     """Legacy vs fast fit path, fine-tune (60 steps on the newest run) and
     scratch retrain (160 steps on the history window).  Every path gets one
     untimed warmup call first so the rows compare steady-state latency —
     the resident scratch jit is already warm from profile()'s initial fit,
     and leaving the others cold would bill their one-off compiles to the
-    legacy means only."""
+    legacy medians only.  Timings are median-of-k with IQR (k >= 5)."""
     exp = JobExperiment(job_key, seed=seed)
     exp.profile(4)
     n_comp = exp.job.n_components
@@ -79,20 +90,21 @@ def measure_fit(job_key: str, seed: int = 0, repeats: int = 3) -> Dict:
             t0 = time.time()
             fn()
             ts.append(time.time() - t0)
-        return float(np.mean(ts)), float(np.std(ts))
+        m = med_iqr(ts)
+        return m["median"], m["iqr"]
 
-    leg_ft, leg_ft_std = timed(
+    leg_ft, leg_ft_iqr = timed(
         lambda: exp.trainer.fit(exp.graph_history[-n_comp:], steps=60))
-    res_ft, res_ft_std = timed(
+    res_ft, res_ft_iqr = timed(
         lambda: exp.trainer.fit_resident(steps=60, latest_only=True))
     leg_sc, _ = timed(lambda: exp.trainer.fit(
         exp.graph_history[-HISTORY_WINDOW:], steps=160, from_scratch=True))
     res_sc, _ = timed(
         lambda: exp.trainer.fit_resident(steps=160, from_scratch=True))
     return {"job": job_key, "n_graphs": n_comp,
-            "finetune_s_legacy": leg_ft, "finetune_s_legacy_std": leg_ft_std,
+            "finetune_s_legacy": leg_ft, "finetune_s_legacy_iqr": leg_ft_iqr,
             "finetune_s_resident": res_ft,
-            "finetune_s_resident_std": res_ft_std,
+            "finetune_s_resident_iqr": res_ft_iqr,
             "finetune_speedup": leg_ft / max(res_ft, 1e-9),
             "scratch_s_legacy": leg_sc, "scratch_s_resident": res_sc,
             "scratch_speedup": leg_sc / max(res_sc, 1e-9)}
@@ -149,19 +161,24 @@ def measure_decision(job_key: str, seed: int = 0, repeats: int = 5) -> Dict:
     rel_gap = max(abs(tot_b[s] - tot_p[s]) / max(abs(tot_p[s]), 1e-9)
                   for s in tot_b)
 
-    timings = {}
+    timings, iqrs = {}, {}
     for name, fn in (("batched", exp.enel.recommend),
                      ("pergraph", exp.enel.recommend_pergraph)):
         fn(**kw)                                   # warmup (jit compile)
-        t0 = time.time()
+        ts = []
         for _ in range(repeats):
+            t0 = time.time()
             fn(**kw)
-        timings[name] = (time.time() - t0) / repeats
+            ts.append(time.time() - t0)
+        m = med_iqr(ts)
+        timings[name], iqrs[name] = m["median"], m["iqr"]
     return {"job": job_key, "n_components": job.n_components,
             "n_candidates": len(cands),
             "n_graphs_per_decision": len(cands) * (job.n_components - 1),
             "decide_ms_pergraph": timings["pergraph"] * 1e3,
+            "decide_ms_pergraph_iqr": iqrs["pergraph"] * 1e3,
             "decide_ms_batched": timings["batched"] * 1e3,
+            "decide_ms_batched_iqr": iqrs["batched"] * 1e3,
             "speedup": timings["pergraph"] / timings["batched"],
             "max_abs_dev_sweep_vs_materialized": max_dev,
             "max_rel_total_gap_vs_legacy_engine": rel_gap,
@@ -177,8 +194,9 @@ def main(out_path: str = "BENCH_decision.json"):
     for job in ("lr", "mpc", "kmeans", "gbt"):
         r = measure(job)
         rows.append(r)
-        print(f"fig5,{job},graphs={r['n_graphs']},fit={r['fit_s_mean']:.2f}s,"
-              f"predict={r['predict_s_mean']:.3f}s")
+        print(f"fig5,{job},graphs={r['n_graphs']},"
+              f"fit={r['fit_s_median']:.2f}s±{r['fit_s_iqr']:.2f},"
+              f"predict={r['predict_s_median']:.3f}s")
     fit_rows = []
     for job in ("lr", "mpc", "kmeans", "gbt"):
         r = measure_fit(job)

@@ -32,14 +32,15 @@ from typing import Dict, List
 import numpy as np
 
 try:
-    from benchmarks.fig5_timing import merge_bench_json
+    from benchmarks.fig5_timing import med_iqr, merge_bench_json
 except ImportError:                      # run as a script from benchmarks/
-    from fig5_timing import merge_bench_json
+    from fig5_timing import med_iqr, merge_bench_json
 from repro.core import model as enel_model
 from repro.core.graph import summary_node
 from repro.core.service import DecisionService
 from repro.dataflow import FleetCampaign, JobExperiment
 from repro.dataflow.runner import _component_nodes, _future_nodes, _to_graph
+from repro.sim.engine import SimStepRequest
 
 JOB_CYCLE = ("lr", "mpc", "kmeans", "gbt")
 MAX_BUCKETS = 12          # bucket-ladder bound for the 4-job mini-campaign
@@ -93,14 +94,17 @@ def measure_fleet(base_exps: List[JobExperiment], sizes=(1, 8, 32),
             service.decide(
                 [exp.enel.prepare_request(**kw) for exp, kw in fleet])
             bat_t.append(time.time() - t0)
-        seq, bat = float(np.median(seq_t)), float(np.median(bat_t))
+        seq_m, bat_m = med_iqr(seq_t), med_iqr(bat_t)
+        seq, bat = seq_m["median"], bat_m["median"]
         rows.append({
             "fleet_size": size,
             "sequential_dec_per_s": size / seq,
             "batched_dec_per_s": size / bat,
             "speedup": seq / bat,
             "sequential_ms_per_decision": seq / size * 1e3,
+            "sequential_ms_iqr": seq_m["iqr"] / size * 1e3,
             "batched_ms_per_decision": bat / size * 1e3,
+            "batched_ms_iqr": bat_m["iqr"] / size * 1e3,
         })
     return rows
 
@@ -121,8 +125,11 @@ def measure_budget(adaptive_runs: int = 2,
             try:
                 req = next(gen)
                 while True:
-                    visited.add(req.bucket_key)
-                    req = gen.send(exp.service.decide([req])[0])
+                    if isinstance(req, SimStepRequest):
+                        req = gen.send(exp.backend.step([req])[0])
+                    else:
+                        visited.add(req.bucket_key)
+                        req = gen.send(exp.service.decide([req])[0])
             except StopIteration:
                 pass
     compiles = enel_model.trace_count("fleet_sweep")

@@ -109,13 +109,14 @@ def fig5() -> str:
         from benchmarks.fig5_timing import measure
         # lr (few stages/component) vs gbt (most components+stages): the
         # extremes the paper's Fig. 5 contrasts
-        rows = [measure(j, repeats=1) for j in ("lr", "gbt")]
+        rows = [measure(j, repeats=5) for j in ("lr", "gbt")]
         lines = ["| job | graphs/run | fine-tune (s) | predict (s) |",
                  "|---|---|---|---|"]
         for r in rows:
             lines.append(f"| {r['job']} | {r['n_graphs']} | "
-                         f"{r['fit_s_mean']:.2f} ± {r['fit_s_std']:.2f} | "
-                         f"{r['predict_s_mean']:.3f} |")
+                         f"{r['fit_s_median']:.2f} "
+                         f"(IQR {r['fit_s_iqr']:.2f}) | "
+                         f"{r['predict_s_median']:.3f} |")
         return "\n".join(lines)
     except Exception as e:
         return f"(fig5 failed: {e})"

@@ -74,8 +74,8 @@ def main() -> None:
     # Fig 5: fine-tune / inference timing
     def fig5():
         from benchmarks.fig5_timing import measure
-        rows = [measure(j, repeats=2) for j in ("lr", "gbt")]
-        return {r["job"]: round(r["fit_s_mean"], 2) for r in rows}
+        rows = [measure(j, repeats=5) for j in ("lr", "gbt")]
+        return {r["job"]: round(r["fit_s_median"], 2) for r in rows}
     ok &= _bench("fig5_finetune_seconds", fig5, lambda r: str(r))
 
     # Roofline table + hillclimb-cell selection (reads dry-run artifacts)

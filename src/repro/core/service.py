@@ -19,6 +19,7 @@ recompilation-free service:
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict, defaultdict
 from typing import Dict, List, Optional, Sequence
 
@@ -75,7 +76,13 @@ class DecisionRequest:
 
 
 class DecisionResult:
-    """Pick + totals (fetched in one transfer); per-component preds lazy."""
+    """Pick + totals (fetched in one transfer); per-component preds lazy.
+
+    ``service_seconds`` is this request's amortized share of the service
+    call that produced it — the runner bills it to the run's decision
+    latency instead of timing across its generator suspension (which,
+    under fleet interleaving, would charge one job for the whole round).
+    """
 
     def __init__(self, scaleout: int, predicted: float,
                  totals: Dict[int, float], per_component_dev,
@@ -83,6 +90,7 @@ class DecisionResult:
         self.scaleout = scaleout
         self.predicted = predicted
         self.totals = totals
+        self.service_seconds = 0.0
         self._per_dev = per_component_dev       # (C_bucket, K_bucket) device
         self._shape = (n_candidates, n_components)
         self._per_np: Optional[np.ndarray] = None
@@ -119,15 +127,44 @@ def _fleet_impl(params, base, h_onehot, deltas, edge_dst, edge_src,
 _fleet_jit = jax.jit(_fleet_impl, static_argnums=(11,))
 
 
+def apply_capacity(request: DecisionRequest, max_scaleout: int
+                   ) -> DecisionRequest:
+    """Capacity-capped pick: mask candidates above ``max_scaleout`` (a
+    multi-tenant executor-pool constraint) so the on-device compliant pick
+    can only choose a scale-out the shrunken pool can actually grant.
+
+    Returns ``request`` unchanged when the cap does not bind.  If the cap
+    excludes every candidate, the smallest valid candidate stays eligible
+    (a job never picks below the range floor; the pool accounting admits
+    jobs only with at least that much headroom).
+    """
+    over = request.cand_valid & (request.candidates > max_scaleout)
+    if not over.any():
+        return request
+    cv = request.cand_valid & ~over
+    if not cv.any():
+        lo = request.candidates[request.cand_valid].min()
+        cv = request.cand_valid & (request.candidates <= lo)
+    return dataclasses.replace(request, cand_valid=cv)
+
+
 class DecisionService:
     """Collects concurrent decision requests and dispatches them batched.
 
     ``decide`` groups requests by bucket key, pads each group to a JOB_LADDER
     rung along the job axis, evaluates every group in one jit dispatch and
     fetches each group's picks + totals in a single host transfer.
+
+    Dispatch is double-buffered by default: every group is stacked and
+    dispatched first (jax dispatch is async), and the host transfers are
+    fetched in a second pass — so host request-stacking of the next bucket
+    overlaps device compute of the current one.  ``double_buffer=False``
+    restores the synchronous stack->dispatch->fetch loop (decision parity
+    between the two modes is asserted in tests).
     """
 
-    def __init__(self):
+    def __init__(self, double_buffer: bool = True):
+        self.double_buffer = double_buffer
         self.decisions = 0          # requests served
         self.dispatches = 0         # jit dispatches issued
         self.batched_away = 0       # dispatches saved vs one-per-request
@@ -157,40 +194,57 @@ class DecisionService:
             self._stack_memo.popitem(last=False)
         return stacked
 
+    def _dispatch_group(self, key: tuple, group: List[DecisionRequest]):
+        """Stack one bucket group and issue its (async) jit dispatch."""
+        j_b = _job_bucket(len(group))
+        rows = group + [group[-1]] * (j_b - len(group))
+        stack = lambda get: jax.tree_util.tree_map(
+            _stack_leaves, *[get(r) for r in rows])
+        out = _fleet_jit(
+            self._stack_tree((key, j_b, "params"), rows,
+                             lambda r: r.params),
+            self._stack_tree((key, j_b, "base"), rows, lambda r: r.base),
+            self._stack_tree((key, j_b, "h_onehot"), rows,
+                             lambda r: r.h_onehot),
+            stack(lambda r: r.deltas),
+            self._stack_tree((key, j_b, "edge_dst"), rows,
+                             lambda r: r.edge_dst),
+            self._stack_tree((key, j_b, "edge_src"), rows,
+                             lambda r: r.edge_src),
+            self._stack_tree((key, j_b, "edge_valid"), rows,
+                             lambda r: r.edge_valid),
+            self._stack_tree((key, j_b, "candidates"), rows,
+                             lambda r: r.candidates),
+            self._stack_tree((key, j_b, "cand_valid"), rows,
+                             lambda r: r.cand_valid),
+            jnp.asarray([r.elapsed for r in rows], jnp.float32),
+            jnp.asarray([r.target for r in rows], jnp.float32),
+            group[0].levels)
+        self.dispatches += 1
+        self.batched_away += len(group) - 1
+        return out
+
     def decide(self, requests: Sequence[DecisionRequest]
                ) -> List[DecisionResult]:
+        t_start = time.time()
         groups: Dict[tuple, List[int]] = defaultdict(list)
         for i, r in enumerate(requests):
             groups[r.bucket_key].append(i)
         results: List[Optional[DecisionResult]] = [None] * len(requests)
+        staged = []
         for key, idxs in groups.items():
-            group = [requests[i] for i in idxs]
-            j_b = _job_bucket(len(group))
-            rows = group + [group[-1]] * (j_b - len(group))
-            stack = lambda get: jax.tree_util.tree_map(
-                _stack_leaves, *[get(r) for r in rows])
-            picked, totals, per = _fleet_jit(
-                self._stack_tree((key, j_b, "params"), rows,
-                                 lambda r: r.params),
-                self._stack_tree((key, j_b, "base"), rows, lambda r: r.base),
-                self._stack_tree((key, j_b, "h_onehot"), rows,
-                                 lambda r: r.h_onehot),
-                stack(lambda r: r.deltas),
-                self._stack_tree((key, j_b, "edge_dst"), rows,
-                                 lambda r: r.edge_dst),
-                self._stack_tree((key, j_b, "edge_src"), rows,
-                                 lambda r: r.edge_src),
-                self._stack_tree((key, j_b, "edge_valid"), rows,
-                                 lambda r: r.edge_valid),
-                self._stack_tree((key, j_b, "candidates"), rows,
-                                 lambda r: r.candidates),
-                self._stack_tree((key, j_b, "cand_valid"), rows,
-                                 lambda r: r.cand_valid),
-                jnp.asarray([r.elapsed for r in rows], jnp.float32),
-                jnp.asarray([r.target for r in rows], jnp.float32),
-                group[0].levels)
-            # ONE host transfer per group: picks + per-candidate totals
-            picked_np, totals_np = jax.device_get((picked, totals))
+            out = self._dispatch_group(key, [requests[i] for i in idxs])
+            if not self.double_buffer:
+                # synchronous mode: fetch before stacking the next bucket
+                out = (jax.device_get(out[:2]), out[2])
+            staged.append((idxs, out))
+        for idxs, out in staged:
+            if self.double_buffer:
+                picked, totals, per = out
+                # ONE host transfer per group: picks + per-candidate totals
+                picked_np, totals_np = jax.device_get((picked, totals))
+            else:
+                (picked_np, totals_np), per = out
             for gi, ri in enumerate(idxs):
                 req = requests[ri]
                 sl = int(picked_np[gi])
@@ -202,7 +256,9 @@ class DecisionService:
                     per_component_dev=per[gi],
                     n_candidates=len(req.candidate_list),
                     n_components=req.n_components)
-            self.dispatches += 1
-            self.batched_away += len(group) - 1
         self.decisions += len(requests)
+        if requests:
+            share = (time.time() - t_start) / len(requests)
+            for r in results:
+                r.service_seconds = share
         return results

@@ -4,10 +4,10 @@ from repro.dataflow.runner import JobExperiment, RunStats, window_stats
 from repro.dataflow.simulator import ClusterSim, RunRecord, rescale_overhead
 from repro.dataflow.workloads import (DATASETS, JOBS, SCALEOUT_RANGE, JobSpec,
                                       StageSpec, make_multiclass, make_points,
-                                      make_vandermonde)
+                                      make_vandermonde, scale_job)
 
 __all__ = ["ClusterSim", "ContextEncoder", "DATASETS", "FleetCampaign",
            "JOBS", "JobExperiment",
            "JobSpec", "RunRecord", "RunStats", "SCALEOUT_RANGE", "StageSpec",
            "make_multiclass", "make_points", "make_vandermonde",
-           "rescale_overhead", "window_stats"]
+           "rescale_overhead", "scale_job", "window_stats"]

@@ -1,61 +1,249 @@
-"""Multi-job fleet campaigns over the shared decision service.
+"""Multi-job fleet campaigns over the shared decision service and a shared
+simulation backend.
 
 A :class:`FleetCampaign` owns one :class:`~repro.core.service.DecisionService`
 shared by many :class:`~repro.dataflow.runner.JobExperiment`\\ s (four job
 classes x several seeds, the paper's multi-tenant setting).  Each adaptive
-run executes as a generator that yields its pending rescaling decision at
-every component boundary; the campaign interleaves all generators and hands
-EVERY currently-pending request to the service in one call, so same-bucket
-decisions from different jobs ride a single jit dispatch while each job
+run executes as a generator that yields its pending simulation step at every
+component and its pending rescaling decision at every decision point; the
+campaign interleaves all generators in lockstep rounds and hands EVERY
+currently-pending request of each kind to its engine in one call — sim steps
+ride one vectorized dispatch (``engine="batched"``) and same-bucket
+decisions from different jobs ride a single jit dispatch, while each job
 still sees its own model's predictions.
+
+:meth:`FleetCampaign.arrival_campaign` adds the multi-tenant capacity model:
+a global executor pool with Poisson job arrivals — concurrent jobs contend,
+and every rescaling decision is capped to the job's fair share of the free
+pool (``repro.core.service.apply_capacity``), so the compliant pick must
+respect a shrinking max scale-out.  The invariant ``sum(allocations) <=
+pool_size`` holds after every round: admission clamps the initial
+allocation to the headroom, and the per-round caps hand each pending
+decision ``alloc_i + free // n_pending``.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.service import DecisionService
+import numpy as np
+
+from repro.core.service import DecisionService, apply_capacity
 from repro.dataflow.runner import JobExperiment, RunStats
+from repro.dataflow.workloads import SCALEOUT_RANGE
+from repro.sim.engine import BatchedClusterSim, SimStepRequest
+
+
+@dataclass
+class CapacityTrace:
+    """Per-round pool accounting of an arrival campaign."""
+    round_idx: int
+    active: int
+    pool_used: int
+    pool_size: int
+    capped_decisions: int = 0
+    arrivals: int = 0
 
 
 class FleetCampaign:
-    """Drive many concurrent job experiments through one decision service."""
+    """Drive many concurrent job experiments through one decision service.
+
+    Pass ``engine="batched"`` to re-register every experiment on ONE shared
+    :class:`BatchedClusterSim` (before any runs have started), so each
+    lockstep round advances the whole fleet's simulation in one device
+    dispatch.  The default keeps each experiment's own backend (the numpy
+    per-job event loop), which is the baseline the scenario-suite benchmark
+    compares against.
+    """
 
     def __init__(self, experiments: Sequence[JobExperiment],
-                 service: Optional[DecisionService] = None):
+                 service: Optional[DecisionService] = None,
+                 engine: Optional[str] = None):
         self.service = service or DecisionService()
         self.experiments = list(experiments)
         for exp in self.experiments:
             exp.service = self.service          # single-run calls batch too
+        if engine == "batched":
+            shared = BatchedClusterSim()
+            for exp in self.experiments:
+                assert exp._run_idx == 0, \
+                    "attach the shared backend before any runs"
+                exp.backend = shared
+                exp.sim_slot = shared.register(exp.job, exp.seed,
+                                               exp.scenario)
 
     def profile(self, n_runs: int = 10) -> None:
         for exp in self.experiments:
             exp.profile(n_runs)
 
-    def adaptive_round(self, method: str = "enel",
-                       inject_failures: bool = False) -> List[RunStats]:
-        """One adaptive run of EVERY experiment, decisions cross-batched.
-
-        All experiments advance to their next decision point; the set of
-        pending requests is decided in one service call (grouped by shape
-        bucket -> one jit dispatch per bucket), and each experiment resumes
-        with its own result.  Returns the per-experiment RunStats in order.
-        """
-        gens = {i: exp.adaptive_run_gen(method, inject_failures)
-                for i, exp in enumerate(self.experiments)}
-        stats: Dict[int, RunStats] = {}
+    # ---------------------------------------------------------- round driver
+    def _start(self, gens: Dict[int, object], stats: Dict[int, RunStats]
+               ) -> Dict[int, object]:
         pending: Dict[int, object] = {}
         for i, gen in list(gens.items()):
             try:
                 pending[i] = next(gen)
-            except StopIteration as stop:       # run without any decision
+            except StopIteration as stop:       # run without any request
                 stats[i] = stop.value
+        return pending
+
+    def _round(self, gens: Dict[int, object], pending: Dict[int, object],
+               stats: Dict[int, RunStats],
+               caps: Optional[Dict[int, int]] = None,
+               on_decision=None) -> Tuple[Dict[int, object], int, List[int]]:
+        """One lockstep round: batch pending sim steps per backend and
+        pending decisions per shape bucket, resume every generator.
+
+        ``caps`` (job id -> max scale-out) applies capacity caps to the
+        listed decision requests; ``on_decision(i, result)`` observes each
+        decision as it lands.  Returns (next pending, capped-decision
+        count, ids of generators that finished this round).
+        """
+        results: Dict[int, object] = {}
+        sims = {i: r for i, r in pending.items()
+                if isinstance(r, SimStepRequest)}
+        decs = {i: r for i, r in pending.items() if i not in sims}
+        by_backend: Dict[int, List[int]] = {}
+        for i in sims:
+            by_backend.setdefault(
+                id(self.experiments[i].backend), []).append(i)
+        for ids in by_backend.values():
+            backend = self.experiments[ids[0]].backend
+            for i, res in zip(ids, backend.step([sims[i] for i in ids])):
+                results[i] = res
+        capped = 0
+        if decs:
+            ids = list(decs)
+            reqs = []
+            for i in ids:
+                req = decs[i]
+                if caps is not None and i in caps:
+                    limited = apply_capacity(req, caps[i])
+                    capped += limited is not req
+                    req = limited
+                reqs.append(req)
+            for i, res in zip(ids, self.service.decide(reqs)):
+                results[i] = res
+                if on_decision is not None:
+                    on_decision(i, res)
+        nxt: Dict[int, object] = {}
+        done: List[int] = []
+        for i, res in results.items():
+            try:
+                nxt[i] = gens[i].send(res)
+            except StopIteration as stop:
+                stats[i] = stop.value
+                done.append(i)
+        return nxt, capped, done
+
+    def _drain(self, gens: Dict[int, object]) -> Dict[int, RunStats]:
+        """Interleave generators to completion, batching each round's
+        pending requests per kind (and per sim backend)."""
+        stats: Dict[int, RunStats] = {}
+        pending = self._start(gens, stats)
         while pending:
-            ids = list(pending)
-            results = self.service.decide([pending[i] for i in ids])
-            pending = {}
-            for i, result in zip(ids, results):
-                try:
-                    pending[i] = gens[i].send(result)
-                except StopIteration as stop:
-                    stats[i] = stop.value
+            pending, _, _ = self._round(gens, pending, stats)
+        return stats
+
+    def adaptive_round(self, method: str = "enel",
+                       inject_failures: bool = False) -> List[RunStats]:
+        """One adaptive run of EVERY experiment, requests cross-batched.
+
+        All experiments advance to their next pending request; each round
+        the set of pending sim steps is executed in one backend call per
+        backend and the set of pending decisions in one service call
+        (grouped by shape bucket -> one jit dispatch per bucket), and each
+        experiment resumes with its own result.  Returns the
+        per-experiment RunStats in order.
+        """
+        gens = {i: exp.adaptive_run_gen(method, inject_failures)
+                for i, exp in enumerate(self.experiments)}
+        stats = self._drain(gens)
         return [stats[i] for i in range(len(self.experiments))]
+
+    # ------------------------------------------------------ multi-tenant pool
+    def arrival_campaign(self, *, pool_size: int, arrival_rate: float,
+                         method: str = "enel", inject_failures: bool = False,
+                         seed: int = 0, max_rounds: int = 64
+                         ) -> Tuple[List[Optional[RunStats]],
+                                    List[CapacityTrace]]:
+        """Poisson arrivals into a bounded executor pool.
+
+        Experiments queue up; each lockstep round admits ``~Poisson(rate)``
+        waiting jobs (clamped to the pool headroom — a job needs at least
+        the minimum scale-out), runs one interleaved round of every active
+        job, and caps every pending decision at the job's current
+        allocation plus its fair share of the free pool.  Jobs run one
+        adaptive run each and release their executors on completion.
+        """
+        assert method == "enel", \
+            "capacity caps ride the decision-service request path, which " \
+            "only Enel uses (Ellis decides inline in the runner)"
+        rng = np.random.RandomState(seed)
+        s_min = SCALEOUT_RANGE[0]
+        waiting = list(range(len(self.experiments)))
+        gens: Dict[int, object] = {}
+        pending: Dict[int, object] = {}
+        # granted allocation per active job: updated the moment a pick is
+        # granted (decision result) and re-confirmed by the next sim step,
+        # so admissions never read a stale pool
+        alloc: Dict[int, int] = {}
+        stats_d: Dict[int, RunStats] = {}
+        trace: List[CapacityTrace] = []
+
+        def admit(row: CapacityTrace):
+            n = int(rng.poisson(arrival_rate)) if arrival_rate > 0 \
+                else len(waiting)
+            for _ in range(n):
+                if not waiting:
+                    return
+                free = pool_size - sum(alloc.values())
+                if free < s_min:
+                    return
+                i = waiting.pop(0)
+                exp = self.experiments[i]
+                exp.scale_cap = free          # clamps the initial allocation
+                gens[i] = exp.adaptive_run_gen(method, inject_failures)
+                try:
+                    pending[i] = next(gens[i])
+                except StopIteration as stop:
+                    stats_d[i] = stop.value
+                    continue
+                alloc[i] = int(getattr(pending[i], "end_scaleout", s_min))
+                row.arrivals += 1
+
+        for round_idx in range(max_rounds):
+            row = CapacityTrace(round_idx, 0, 0, pool_size)
+            admit(row)
+            if not pending and not waiting:
+                break
+            for i, r in pending.items():      # granted picks take effect
+                if isinstance(r, SimStepRequest):
+                    alloc[i] = int(r.end_scaleout)
+            dec_ids = [i for i, r in pending.items()
+                       if not isinstance(r, SimStepRequest)]
+            caps = None
+            if dec_ids:
+                free = max(0, pool_size - sum(alloc.values()))
+                share = free // len(dec_ids)
+                caps = {i: alloc.get(i, s_min) + share for i in dec_ids}
+
+            def grant(i, res):                # reserve the pick immediately
+                alloc[i] = int(res.scaleout)  # <= caps[i]: range floor 4 is
+                # always a candidate, so apply_capacity's fallback (which
+                # could exceed a sub-floor cap) cannot trigger here
+
+            pending, capped, done = self._round(gens, pending, stats_d,
+                                                caps=caps, on_decision=grant)
+            row.capped_decisions = capped
+            for i in done:                    # job done: release executors
+                alloc.pop(i, None)
+                self.experiments[i].scale_cap = None
+            row.active = len(pending)
+            row.pool_used = sum(alloc.values())
+            trace.append(row)
+            assert row.pool_used <= pool_size, "capacity model oversubscribed"
+        for exp in self.experiments:          # max_rounds may strand actives
+            exp.scale_cap = None
+        stats = [stats_d.get(i) for i in range(len(self.experiments))]
+        return stats, trace

@@ -6,18 +6,30 @@ where the scaler is consulted at every component boundary.  Enel retrains
 from scratch every 5th run and fine-tunes otherwise; Ellis refits its
 per-component model ensemble after every run.
 
-Enel decisions route through a :class:`~repro.core.service.DecisionService`:
-the execution loop is a generator that YIELDS shape-bucketed decision
-requests and receives the service's picks, so a single job drives it with a
-private service (one request per dispatch) while a fleet campaign
-(``repro.dataflow.fleet``) interleaves many jobs and batches all concurrent
-requests into one dispatch per shape bucket.
+The execution loop is a generator that YIELDS two kinds of requests and
+receives their results:
+
+* :class:`~repro.sim.engine.SimStepRequest` — the next component's
+  simulated execution, answered by a sim backend: the per-job numpy event
+  loop (:class:`~repro.sim.engine.NumpySimBackend`, ``engine="numpy"``) or
+  the vectorized fleet engine
+  (:class:`~repro.sim.engine.BatchedClusterSim`, ``engine="batched"``,
+  bit-identical at batch=1), which a fleet campaign steps for ALL
+  concurrent jobs in one device dispatch;
+* :class:`~repro.core.service.DecisionRequest` — the pending rescaling
+  decision, answered by a :class:`~repro.core.service.DecisionService`
+  (shape-bucketed; cross-job batched under a campaign).
+
+Disturbance scenarios (``repro.sim.scenarios``) and dataset-size scaling
+(``size_scale``) parameterize the execution context; ``share_models_from``
+transplants a trained model into a new context for the paper's
+cross-context reuse claim (see ``repro.sim.evaluate``).
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -25,12 +37,15 @@ from repro.core.graph import (ComponentGraph, NodeAttrs, build_graph,
                               historical_summary, summary_node)
 from repro.core.scaling import EnelScaler
 from repro.core.ellis import EllisScaler
-from repro.core.service import DecisionService
+from repro.core.service import DecisionRequest, DecisionService
 from repro.core.training import EnelTrainer
 from repro.dataflow.context import ContextEncoder
 from repro.dataflow.simulator import (ClusterSim, ComponentRecord, RunRecord,
                                       rescale_overhead)
-from repro.dataflow.workloads import JOBS, SCALEOUT_RANGE, JobSpec
+from repro.dataflow.workloads import JOBS, SCALEOUT_RANGE, JobSpec, scale_job
+from repro.sim.engine import (BatchedClusterSim, NumpySimBackend,
+                              SimStepRequest)
+from repro.sim.scenarios import BASELINE, Scenario
 
 PROFILING_SCALEOUTS = [4, 8, 11, 14, 18, 21, 25, 28, 32, 36]
 HISTORY_WINDOW = 96           # newest graphs kept for scratch retraining
@@ -46,6 +61,7 @@ class RunStats:
     predicted: Optional[float] = None
     scaleouts: List[int] = field(default_factory=list)
     n_failures: int = 0
+    n_rescales: int = 0
     fit_seconds: float = 0.0
     decide_seconds: float = 0.0
     decide_calls: int = 0
@@ -99,37 +115,82 @@ def _to_graph(nodes: List[NodeAttrs], preds: List[NodeAttrs],
     return build_graph(all_nodes, edges, component_id=comp_idx)
 
 
-def drive(gen, service: DecisionService):
-    """Run a decision generator to completion against a service, answering
-    each yielded :class:`DecisionRequest` with the service's decision."""
+def drive(gen, service: Optional[DecisionService], backend=None):
+    """Run an execution generator to completion, answering each yielded
+    :class:`SimStepRequest` with the backend's component record and each
+    :class:`DecisionRequest` with the service's decision."""
     try:
         req = next(gen)
         while True:
-            req = gen.send(service.decide([req])[0])
+            if isinstance(req, SimStepRequest):
+                req = gen.send(backend.step([req])[0])
+            else:
+                req = gen.send(service.decide([req])[0])
     except StopIteration as stop:
         return stop.value
 
 
 class JobExperiment:
-    """Shared environment for one job: simulator, encoder, both scalers."""
+    """Shared environment for one job: simulator, encoder, both scalers.
+
+    ``engine`` selects the sim backend ("numpy": per-job reference event
+    loop; "batched": vectorized engine — bit-identical, and batched across
+    jobs when a shared ``backend`` is passed, e.g. by a fleet campaign).
+    ``scenario`` injects seeded disturbances; ``size_scale`` scales the
+    dataset (cross-context axis); ``share_models_from`` reuses another
+    experiment's trained model/encoder/scalers instead of fresh ones
+    (transfer deployment — the source experiment should be done running).
+    """
 
     def __init__(self, job_key: str, seed: int = 0,
                  candidate_stride: int = 2,
-                 service: Optional[DecisionService] = None):
-        self.job = JOBS[job_key]
+                 service: Optional[DecisionService] = None,
+                 engine: str = "numpy",
+                 scenario: Optional[Scenario] = None,
+                 backend=None, size_scale: float = 1.0,
+                 share_models_from: Optional["JobExperiment"] = None):
+        job = JOBS[job_key]
+        if size_scale != 1.0:
+            job = scale_job(job, size_scale)
+        self.job = job
         self.job_key = job_key
-        self.sim = ClusterSim(seed=seed)
-        self.encoder = ContextEncoder([self.job], seed=seed)
-        self.trainer = EnelTrainer(seed=seed, cache_capacity=HISTORY_WINDOW)
+        self.seed = seed
+        self.scenario = scenario or BASELINE
+        self.engine = engine
+        self.sim = ClusterSim(seed=seed, scenario=self.scenario)
+        if backend is not None:
+            self.backend = backend
+        elif engine == "batched":
+            self.backend = BatchedClusterSim()
+        elif engine == "numpy":
+            self.backend = NumpySimBackend()
+        else:
+            raise ValueError(f"unknown engine {engine!r}")
+        if isinstance(self.backend, NumpySimBackend):
+            self.sim_slot = self.backend.adopt(self.sim, self.job)
+        else:
+            self.sim_slot = self.backend.register(self.job, seed,
+                                                  self.scenario)
+        if share_models_from is not None:
+            src = share_models_from
+            self.encoder = src.encoder
+            self.trainer = src.trainer
+            self.enel = src.enel
+            self.ellis = src.ellis
+        else:
+            self.encoder = ContextEncoder([self.job], seed=seed)
+            self.trainer = EnelTrainer(seed=seed,
+                                       cache_capacity=HISTORY_WINDOW)
+            self.enel = EnelScaler(self.trainer, SCALEOUT_RANGE,
+                                   candidate_stride=candidate_stride)
+            self.ellis = EllisScaler(SCALEOUT_RANGE,
+                                     rescale_overhead=rescale_overhead(4, 8),
+                                     candidate_stride=candidate_stride)
         self.service = service or DecisionService()
-        self.enel = EnelScaler(self.trainer, SCALEOUT_RANGE,
-                               candidate_stride=candidate_stride)
-        self.ellis = EllisScaler(SCALEOUT_RANGE,
-                                 rescale_overhead=rescale_overhead(4, 8),
-                                 candidate_stride=candidate_stride)
         # decision cadence: every component for short jobs, every 2nd for
         # the 22-component LR/MPC (keeps the campaign tractable on 1 core)
         self.decision_interval = 2 if self.job.n_components > 15 else 1
+        self.scale_cap: Optional[int] = None   # multi-tenant capacity cap
         self.graph_history: List[ComponentGraph] = []
         self.target: Optional[float] = None
         self.stats: List[RunStats] = []
@@ -142,6 +203,7 @@ class JobExperiment:
         with the service's :class:`DecisionResult`, returns the run tuple."""
         job = self.job
         run = RunRecord(job.name, self.target or 0.0)
+        self.backend.begin_run(self.sim_slot)
         clock = 0.0
         s_prev = s = initial_s
         scaleouts = [s]
@@ -150,11 +212,14 @@ class JobExperiment:
         decide_s = 0.0
         decide_n = 0
         for k in range(job.n_components):
-            comp = self.sim.run_component(
-                job, k, clock=clock, start_scaleout=s_prev, end_scaleout=s,
-                inject_failures=inject_failures, failures_log=run.failures)
+            step = yield SimStepRequest(
+                slot=self.sim_slot, comp_idx=k, start_scaleout=s_prev,
+                end_scaleout=s, clock=clock,
+                inject_failures=inject_failures)
+            comp = step.component
             run.components.append(comp)
-            clock += comp.runtime
+            run.failures.extend(step.failures)
+            clock = step.clock_end
             nodes = _component_nodes(self.encoder, job, comp)
             preds = [p for p in (prev_summary,) if p is not None]
             if k > 0:
@@ -171,6 +236,10 @@ class JobExperiment:
             # --- dynamic scaling decision at the component boundary
             if scaler and k < job.n_components - 1 and \
                     k % self.decision_interval == 0:
+                # decision latency = this job's local work + its amortized
+                # share of the service dispatch (result.service_seconds);
+                # the suspended yield interval is NOT billed — under fleet
+                # interleaving it contains every other job's round
                 t0 = time.time()
                 if scaler == "enel":
                     # batched candidate sweep: template + deltas, one
@@ -187,8 +256,11 @@ class JobExperiment:
                         n_components=job.n_components, elapsed=clock,
                         current_scaleout=s, target_runtime=self.target,
                         current_summary=prev_summary)
+                    decide_s += time.time() - t0
                     result = yield req
+                    t0 = time.time()
                     s_new, _, _ = self.enel.apply_decision(req, result)
+                    decide_s += result.service_seconds
                 else:
                     s_new, _ = self.ellis.recommend(
                         next_comp=k + 1, n_components=job.n_components,
@@ -207,10 +279,15 @@ class JobExperiment:
                                           List[int], float, int]:
         return drive(self._execute_gen(scaler=scaler,
                                        inject_failures=inject_failures,
-                                       initial_s=initial_s), self.service)
+                                       initial_s=initial_s), self.service,
+                     self.backend)
 
     # ------------------------------------------------------------ profiling
-    def profile(self, n_runs: int = 10) -> None:
+    def calibrate_target(self, n_runs: int = 10) -> None:
+        """Profiling runs WITHOUT a model fit: sets the runtime target and
+        fits Ellis, feeding the observation history.  Used standalone by
+        cross-context transfer deployments (the transplanted model must not
+        be scratch-retrained just to learn the new context's target)."""
         for i in range(n_runs):
             s = PROFILING_SCALEOUTS[i % len(PROFILING_SCALEOUTS)]
             run, graphs, scaleouts, _, _ = self._execute(
@@ -229,6 +306,9 @@ class JobExperiment:
             st.target = self.target
             st.violation = max(0.0, st.runtime - self.target)
         self.ellis.refit()
+
+    def profile(self, n_runs: int = 10) -> None:
+        self.calibrate_target(n_runs)
         # initial model: scratch-train on the resident ring (profiling graphs
         # were appended run-by-run above — no restack)
         self.trainer.fit_resident(steps=160, from_scratch=True)
@@ -236,7 +316,7 @@ class JobExperiment:
     # -------------------------------------------------------------- adaptive
     def adaptive_run(self, method: str, inject_failures: bool) -> RunStats:
         return drive(self.adaptive_run_gen(method, inject_failures),
-                     self.service)
+                     self.service, self.backend)
 
     def adaptive_run_gen(self, method: str, inject_failures: bool):
         """Generator form of :meth:`adaptive_run` for fleet interleaving."""
@@ -249,6 +329,8 @@ class JobExperiment:
         s0, predicted = self.ellis.recommend(
             next_comp=0, n_components=job.n_components, elapsed=0.0,
             current_scaleout=SCALEOUT_RANGE[0], target_runtime=self.target)
+        if self.scale_cap is not None:      # multi-tenant admission headroom
+            s0 = max(SCALEOUT_RANGE[0], min(s0, int(self.scale_cap)))
         run, graphs, scaleouts, decide_s, decide_n = yield from \
             self._execute_gen(scaler=method,
                               inject_failures=inject_failures, initial_s=s0)
@@ -270,6 +352,7 @@ class JobExperiment:
         st = RunStats(self._run_idx, method, run.runtime, self.target,
                       run.violation, predicted=predicted,
                       scaleouts=scaleouts, n_failures=len(run.failures),
+                      n_rescales=len(run.rescales),
                       fit_seconds=fit_s, decide_seconds=decide_s,
                       decide_calls=decide_n,
                       cache_transfers=cache.transfers - cache0[0],

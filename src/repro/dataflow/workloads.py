@@ -168,3 +168,21 @@ def build_jobs() -> Dict[str, JobSpec]:
 
 JOBS = build_jobs()
 SCALEOUT_RANGE = (4, 36)          # Spark executors (paper §V-A)
+
+
+def scale_job(job: JobSpec, size_scale: float) -> JobSpec:
+    """The same job on a ``size_scale``-times larger (or smaller) dataset:
+    the data-dependent (perfectly-parallel) term of every stage scales with
+    the input size while serial/communication terms stay fixed — the
+    dataset-size axis of cross-context evaluation (C3O-style)."""
+    import dataclasses
+
+    def sc(stages):
+        return tuple(dataclasses.replace(s, parallel=s.parallel * size_scale)
+                     for s in stages)
+
+    ds = dataclasses.replace(job.dataset,
+                             size_gb=job.dataset.size_gb * size_scale)
+    return dataclasses.replace(job, dataset=ds, prep=sc(job.prep),
+                               iter_stages=sc(job.iter_stages),
+                               final=sc(job.final))

@@ -1,0 +1,12 @@
+"""Scenario engine: seeded disturbance scenarios + vectorized fleet simulation.
+
+Import layering (to keep ``repro.dataflow.simulator`` importable on its own):
+this package ``__init__`` only pulls in the leaf modules (``tables``,
+``scenarios``); the vectorized engine lives in ``repro.sim.engine`` (it
+imports the dataflow record types) and the evaluation harness in
+``repro.sim.evaluate`` — import those explicitly.
+"""
+from repro.sim.scenarios import (BASELINE, SCENARIO_NAMES, Scenario,
+                                 make_scenario)
+
+__all__ = ["BASELINE", "SCENARIO_NAMES", "Scenario", "make_scenario"]

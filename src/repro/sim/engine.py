@@ -1,0 +1,532 @@
+"""Vectorized multi-tenant cluster simulation: a whole fleet advances in
+lockstep device steps instead of per-job Python event loops.
+
+:class:`BatchedClusterSim` re-expresses the reference simulator
+(``repro.dataflow.simulator.ClusterSim``) — Ernest-form stage runtimes,
+AR(1) interference, rescale overheads, failure/restart dynamics and every
+scenario disturbance — as one ``lax.scan`` over a ``(stages, jobs)`` batch.
+Per fleet component-step (or per full run) it issues ONE jit dispatch for
+all registered jobs.
+
+Bit-parity contract (tested at batch=1 on all 4 paper jobs): the kernel
+replays the float32 stage recipe documented in
+``repro.dataflow.simulator`` op for op, reading the same precomputed
+tables (``repro.sim.tables``) and the same seeded noise stream (a run's
+``randn(T, N_NOISE)`` block equals the reference's per-stage sequential
+draws).  The only numerical subtlety is FMA contraction: XLA:CPU contracts
+``a*b + c`` into a fused multiply-add, which numpy never does, so every
+product that feeds an add passes through :func:`_nc` — a value-preserving
+``clip(x, -F32_MAX, F32_MAX)`` the compiler cannot fold away and therefore
+cannot contract across.
+
+Dispatch-cost layout: per-stage inputs ride in ONE packed float32 block
+(noise | rt | sq | slow | cpu0 | shuffle0 | io0 | straggler | overhead, see
+the ``_F*`` slices) plus one int block (z | inject; the start scale-out
+only feeds host-side record fields) and a valid mask — a handful of
+host->device conversions per dispatch instead of a dozen, with the
+per-stage table rows pre-packed at build time so a step is a few memcpys.
+
+The runner talks to either engine through the backend protocol at the
+bottom (:class:`SimStepRequest` / :class:`NumpySimBackend` /
+:class:`BatchedClusterSim`): the execution generator *yields* its pending
+component step, so a fleet campaign batches every concurrent job's step
+into one device dispatch while a single job just steps its private backend.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dataflow.simulator import (ClusterSim, ComponentRecord,
+                                      StageRecord)
+from repro.dataflow.workloads import JobSpec
+from repro.sim.scenarios import BASELINE, Scenario
+from repro.sim.tables import (F32, GLOBAL, MAX_FAIL_WINDOWS, N_NOISE, R_MAX,
+                              T_STRAGGLER, W_MAX, FlatJobTables,
+                              flat_job_tables, overhead_f32)
+
+_F32_MAX = np.float32(3.4028235e38)
+
+# packed float-block layout (last axis of the per-stage input block)
+_F_NOISE = slice(0, 4)
+_F_RT = slice(4, 41)
+_F_SQ = slice(41, 78)
+_F_SLOW = slice(78, 115)
+_F_TAB = slice(4, 115)        # rt|sq|slow as stored in the packed tables
+_F_CPU0, _F_SHUF0, _F_IO0, _F_STRAG, _F_OV = 115, 116, 117, 118, 119
+_NF = 120
+
+
+def _nc(x):
+    """No-contract guard: identity for finite f32, but a min/max the
+    compiler cannot remove — prevents FMA contraction of ``x`` into a
+    following add (bit-parity with the numpy reference engine)."""
+    return jnp.clip(x, -_F32_MAX, _F32_MAX)
+
+
+def _gather_s(tab, idx):
+    """(J, 37) table rows gathered at per-job scale-out idx -> (J,)."""
+    return jnp.take_along_axis(tab, idx[:, None], axis=1)[:, 0]
+
+
+# packed per-stage output layout (last axis): clock_before | runtime |
+# metrics(5) | failed | fail_when(8) | fail_hit(8)
+_O_CLK, _O_RT = 0, 1
+_O_MET = slice(2, 7)
+_O_FAILED = 7
+_O_WHEN = slice(8, 8 + MAX_FAIL_WINDOWS)
+_O_HIT = slice(8 + MAX_FAIL_WINDOWS, 8 + 2 * MAX_FAIL_WINDOWS)
+_NO = 8 + 2 * MAX_FAIL_WINDOWS
+
+
+def _make_body(kill_row, burst, preempt, iscale2, mem_tab, shuf_tab):
+    """The shared float32 stage recipe as a scan body over a (jobs,) batch.
+
+    carry: per-job (clock, interference) — padded/invalid stage slots leave
+    the carry untouched (they consume no noise and no AR(1) step, exactly
+    like the reference, which never executes them).  Both kernels (the
+    per-component step and the whole-run dispatch) scan this SAME body, so
+    their bit-parity with the reference engine is one property, not two.
+    """
+    def body(carry, x):
+        clock, interf_prev = carry
+        f, ii, val = x
+        n0, n1, n2, n3 = (f[:, i] for i in range(4))
+        z = ii[:, 0]
+        w0f = jnp.floor(clock / 90.0)
+        w0 = w0f.astype(jnp.int32)
+        wi0 = jnp.clip(w0, 0, W_MAX - 1)
+        burst_w = jnp.take_along_axis(burst, wi0[:, None], 1)[:, 0]
+        innov = jnp.abs(n0) * (iscale2 * burst_w)
+        interf = _nc(0.85 * interf_prev) + _nc(0.15 * innov)
+        interf = jnp.clip(interf, 0.0, 0.45)
+        loc = 1.0 + jnp.maximum(0.0, _nc(n1 * 0.04) + 0.02)
+        loss = jnp.take_along_axis(preempt, wi0[:, None], 1)[:, 0]
+        z_eff = jnp.maximum(z - loss, 1)
+        base = _gather_s(f[:, _F_RT], z_eff)
+        sqb = _gather_s(f[:, _F_SQ], z_eff)
+        slow = _gather_s(f[:, _F_SLOW], z_eff)
+        t = _nc(base * (1.0 + interf) * loc) + _nc(n2 * (0.15 * sqb))
+        t = jnp.maximum(t, 0.2)
+        t = _nc(t * f[:, _F_STRAG])
+        t0 = t
+        fail_ok = (ii[:, 1] > 0) & (z > 4) & val
+        w_hi = jnp.minimum(jnp.floor((clock + t0) / 90.0).astype(jnp.int32),
+                           w0 + MAX_FAIL_WINDOWS - 1)
+        failed = jnp.zeros_like(w0)
+        whens, hits = [], []
+        for j in range(MAX_FAIL_WINDOWS):
+            w = w0 + j
+            when = jnp.take_along_axis(
+                kill_row, jnp.clip(w, 0, W_MAX - 1)[:, None], 1)[:, 0]
+            hit = fail_ok & (w <= w_hi) & (when >= clock) & \
+                (when < clock + t0)
+            frac = jnp.minimum(25.0, t) / jnp.maximum(t, 1e-6)
+            t_new = _nc(t * (1.0 - frac)) + _nc((t * frac) * slow) + 18.0
+            t = jnp.where(hit, t_new, t)
+            failed = failed + hit.astype(jnp.int32)
+            whens.append(when)
+            hits.append(hit)
+        runtime = t + f[:, _F_OV]
+        mem = mem_tab[z_eff]
+        gc = 0.04 + _nc(0.05 * mem)
+        gc = gc + jnp.where(failed > 0, np.float32(0.05), np.float32(0.0))
+        spill = jnp.maximum(0.0, mem - 1.4) * 0.3
+        cpu = _nc(f[:, _F_CPU0] * (1.0 - interf)) + _nc(n3 * 0.02)
+        cpu = jnp.clip(cpu, 0.0, 1.0)
+        shuffle = f[:, _F_SHUF0] * shuf_tab[z_eff]
+        io = f[:, _F_IO0] * jnp.where(failed > 0, np.float32(1.3),
+                                      np.float32(1.0))
+        clock_next = jnp.where(val, clock + runtime, clock)
+        interf_next = jnp.where(val, interf, interf_prev)
+        out = jnp.concatenate(
+            [clock[:, None], runtime[:, None],
+             jnp.stack([cpu, shuffle, io, gc, spill], axis=-1),
+             failed[:, None].astype(jnp.float32),
+             jnp.stack(whens, -1),
+             jnp.stack(hits, -1).astype(jnp.float32)], axis=-1)
+        return (clock_next, interf_next), out
+
+    return body
+
+
+@jax.jit
+def _run_stages(state, fpack, ipack, valid, kill_row, burst, preempt,
+                iscale2, mem_tab, shuf_tab):
+    """Whole-batch scan with host-built per-stage inputs (run_full path)."""
+    body = _make_body(kill_row, burst, preempt, iscale2, mem_tab, shuf_tab)
+    carry, outs = jax.lax.scan(body, (state[:, 0], state[:, 1]),
+                               (fpack, ipack, valid))
+    return jnp.stack(carry, -1), outs
+
+
+def _step_kernel_impl(run_block, ctrl, s_len, kill_row, burst, preempt,
+                      iscale2, mem_tab, shuf_tab):
+    """Per-component step against the device-resident run block.
+
+    ``run_block``: (T, J, _NF) f32, uploaded ONCE per fleet run (noise,
+    packed tables, stragglers).  ``ctrl``: (J, 8) f32 — the ONLY per-step
+    upload: [clock, interf, a, z, inject, n_stages, overhead, cursor]
+    (integer-valued columns are exact in f32).  The kernel slices each
+    job's next ``n_stages`` rows at its cursor and runs the shared body.
+    """
+    t_max = run_block.shape[0]
+    n_jobs = run_block.shape[1]
+    cursor = ctrl[:, 7].astype(jnp.int32)
+    steps = jnp.arange(s_len, dtype=jnp.int32)
+    idx = jnp.clip(cursor[None, :] + steps[:, None], 0, t_max - 1)
+    # whole-row gather over a flat (T*J, NF) view: XLA:CPU lowers this to
+    # row copies, unlike an elementwise take_along_axis over (S, J, NF)
+    flat = idx * n_jobs + jnp.arange(n_jobs, dtype=jnp.int32)[None, :]
+    rows = jnp.take(run_block.reshape(t_max * n_jobs, -1),
+                    flat.reshape(-1), axis=0).reshape(
+                        s_len, n_jobs, run_block.shape[2])
+    z = ctrl[:, 3].astype(jnp.int32)
+    inject = ctrl[:, 4].astype(jnp.int32)
+    n = ctrl[:, 5].astype(jnp.int32)
+    first = steps[:, None] == 0
+    ov = jnp.where(first, ctrl[None, :, 6], 0.0)
+    rows = jnp.concatenate([rows[..., :_F_OV], ov[..., None]], axis=-1)
+    # the body only consumes z and inject (the start scale-out a feeds the
+    # host-side overhead/record fields, never the stage math)
+    ipack = jnp.stack([jnp.broadcast_to(z[None, :], (s_len,) + z.shape),
+                       jnp.broadcast_to(inject[None, :],
+                                        (s_len,) + z.shape)], axis=-1)
+    valid = steps[:, None] < n[None, :]
+    body = _make_body(kill_row, burst, preempt, iscale2, mem_tab, shuf_tab)
+    carry, outs = jax.lax.scan(body, (ctrl[:, 0], ctrl[:, 1]),
+                               (rows, ipack, valid))
+    return jnp.stack(carry, -1), outs
+
+
+_step_kernel = jax.jit(_step_kernel_impl, static_argnums=(2,))
+
+
+# ---------------------------------------------------------------- protocol
+@dataclass
+class SimStepRequest:
+    """One job's pending component execution, yielded by the runner's
+    execution generator and answered by a sim backend."""
+    slot: int
+    comp_idx: int
+    start_scaleout: int
+    end_scaleout: int
+    clock: float
+    inject_failures: bool
+
+
+@dataclass
+class SimStepResult:
+    component: ComponentRecord
+    failures: List[float]          # kill seconds observed in this component
+    clock_end: float
+
+
+class NumpySimBackend:
+    """Per-job event-loop backend: each request runs through the reference
+    :class:`ClusterSim` sequentially (the baseline the vectorized engine is
+    benchmarked against)."""
+
+    def __init__(self):
+        self._slots: List[Tuple[ClusterSim, JobSpec]] = []
+
+    def adopt(self, sim: ClusterSim, job: JobSpec) -> int:
+        self._slots.append((sim, job))
+        return len(self._slots) - 1
+
+    def register(self, job: JobSpec, seed: int,
+                 scenario: Optional[Scenario] = None,
+                 interference_scale: float = 0.12) -> int:
+        return self.adopt(ClusterSim(seed=seed, scenario=scenario,
+                                     interference_scale=interference_scale),
+                          job)
+
+    def begin_run(self, slot: int) -> None:
+        self._slots[slot][0].begin_run()
+
+    def step(self, requests: Sequence[SimStepRequest]
+             ) -> List[SimStepResult]:
+        results = []
+        for req in requests:
+            sim, job = self._slots[req.slot]
+            failures: List[float] = []
+            comp = sim.run_component(
+                job, req.comp_idx, clock=req.clock,
+                start_scaleout=req.start_scaleout,
+                end_scaleout=req.end_scaleout,
+                inject_failures=req.inject_failures or
+                sim.scenario.inject_failures, failures_log=failures)
+            last = comp.stages[-1]
+            results.append(SimStepResult(
+                component=comp, failures=failures,
+                clock_end=float(last.start + last.runtime)))
+        return results
+
+
+# ----------------------------------------------------------------- batched
+class _Slot:
+    def __init__(self, job: JobSpec, seed: int, scenario: Scenario,
+                 interference_scale: float):
+        self.job = job
+        self.seed = seed
+        self.scenario = scenario
+        self.tables: FlatJobTables = flat_job_tables(job,
+                                                     scenario.skew_growth)
+        self.win = scenario.window_tables(seed)
+        self.rng = np.random.RandomState(seed)
+        self.iscale2 = F32(interference_scale * 2.0)
+        self.clock = F32(0.0)
+        self.interf = F32(0.0)
+        self.run_idx = 0
+        self.runs_started = 0
+        self.cursor = 0               # stage cursor within the current run
+        self.stage_idx = 0            # global stage counter (stragglers)
+        self.noise = np.zeros((self.tables.total_stages, N_NOISE), F32)
+
+
+class BatchedClusterSim:
+    """Vectorized fleet engine; implements the same backend protocol as
+    :class:`NumpySimBackend` but answers every concurrent request in one
+    jit dispatch (and can run entire runs in one dispatch via
+    :meth:`run_full`).
+
+    State (clock, AR(1) interference, noise cursors, kill-table rows) is
+    tracked per registered slot on the host and advanced only by the
+    engine itself: the generator's ``req.clock`` must follow the engine's
+    returned ``clock_end`` (the runner does) — steps replayed out of order
+    would diverge from the reference stream.
+    """
+
+    def __init__(self):
+        self._slots: List[_Slot] = []
+        self._built = False
+        self.dispatches = 0
+
+    # ------------------------------------------------------------- registry
+    def register(self, job: JobSpec, seed: int,
+                 scenario: Optional[Scenario] = None,
+                 interference_scale: float = 0.12) -> int:
+        assert not self._built, "register before the first step/run_full"
+        self._slots.append(_Slot(job, seed, scenario or BASELINE,
+                                 interference_scale))
+        return len(self._slots) - 1
+
+    def _build(self):
+        if self._built:
+            return
+        self._built = True
+        self._J = len(self._slots)
+        self._T = max(s.tables.total_stages for s in self._slots)
+        self._S = max(int(s.tables.n_stages.max()) for s in self._slots)
+        self._burst = jnp.asarray(np.stack([s.win["burst"]
+                                            for s in self._slots]))
+        self._preempt = jnp.asarray(np.stack([s.win["preempt"]
+                                              for s in self._slots]))
+        self._iscale2 = jnp.asarray(np.array([s.iscale2
+                                              for s in self._slots]))
+        self._mem_tab = jnp.asarray(GLOBAL["mem"])
+        self._shuf_tab = jnp.asarray(GLOBAL["shuf"])
+        self._kill_dev = None         # per-run upload, cached until begin_run
+        # per-slot packed table block (T_j, 111): rt | sq | slow; plus the
+        # scalar spec columns — copied into the run block by slice
+        self._tabpack = []
+        self._scalpack = []
+        for s in self._slots:
+            t = s.tables
+            self._tabpack.append(np.concatenate(
+                [t.rt, t.sq, t.slow], axis=1).astype(F32))
+            self._scalpack.append(np.stack(
+                [t.cpu0, t.shuffle0, t.io0], axis=1).astype(F32))
+        # device-resident full-run input block for the stepped path: the
+        # noise / tables / straggler columns of EVERY stage of the current
+        # run, uploaded once per fleet run (dirty slots re-packed lazily at
+        # the next step) — a step then ships only the (J, 8) control vector
+        self._run_host = np.zeros((self._T, self._J, _NF), F32)
+        self._run_host[:, :, _F_STRAG] = 1.0
+        for j, s in enumerate(self._slots):
+            tj = s.tables.total_stages
+            self._run_host[:tj, j, _F_TAB] = self._tabpack[j]
+            self._run_host[:tj, j, _F_CPU0:_F_IO0 + 1] = self._scalpack[j]
+        self._run_dev = None
+        self._dirty = set(range(self._J))
+
+    # ------------------------------------------------------------ lifecycle
+    def begin_run(self, slot: int) -> int:
+        s = self._slots[slot]
+        s.run_idx = s.runs_started
+        s.runs_started += 1
+        s.cursor = 0
+        s.clock = F32(0.0)
+        tj = s.tables.total_stages
+        s.noise = s.rng.randn(tj * N_NOISE).astype(F32).reshape(tj, N_NOISE)
+        self._kill_dev = None
+        if self._built:
+            self._dirty.add(slot)
+        return s.run_idx
+
+    def _kill_rows(self):
+        if self._kill_dev is None:
+            self._kill_dev = jnp.asarray(np.stack(
+                [s.win["kill_time"][s.run_idx % R_MAX]
+                 for s in self._slots]))
+        return self._kill_dev
+
+    def _strag_slice(self, slot: int, n: int) -> np.ndarray:
+        s = self._slots[slot]
+        idx = (s.stage_idx + np.arange(n)) % T_STRAGGLER
+        return s.win["straggler"][idx]
+
+    def _run_block(self):
+        """Device copy of the current run's stage inputs; slots whose run
+        began since the last upload are re-packed, and the block is
+        re-shipped once per fleet run (not per step)."""
+        if self._dirty or self._run_dev is None:
+            for j in self._dirty:
+                s = self._slots[j]
+                tj = s.tables.total_stages
+                self._run_host[:tj, j, _F_NOISE] = s.noise
+                self._run_host[:tj, j, _F_STRAG] = self._strag_slice(j, tj)
+            self._dirty.clear()
+            self._run_dev = jnp.asarray(self._run_host)
+        return self._run_dev
+
+    # ----------------------------------------------------------------- step
+    def step(self, requests: Sequence[SimStepRequest]
+             ) -> List[SimStepResult]:
+        """Advance every requested job by one component in ONE dispatch;
+        the only per-step host->device traffic is the (J, 8) control row."""
+        self._build()
+        ctrl = np.zeros((self._J, 8), F32)
+        for j, s in enumerate(self._slots):
+            ctrl[j, 0] = s.clock
+            ctrl[j, 1] = s.interf
+            ctrl[j, 7] = s.cursor
+        spans: List[Tuple[int, int, int]] = []       # (slot, cursor, n)
+        for req in requests:
+            j = req.slot
+            s = self._slots[j]
+            c0 = int(s.tables.comp_start[req.comp_idx])
+            n = int(s.tables.n_stages[req.comp_idx])
+            assert s.cursor == c0, "steps must follow the run's stage order"
+            a, z = int(req.start_scaleout), int(req.end_scaleout)
+            ctrl[j, 2] = a
+            ctrl[j, 3] = z
+            ctrl[j, 4] = int(req.inject_failures or
+                             s.scenario.inject_failures)
+            ctrl[j, 5] = n
+            ctrl[j, 6] = overhead_f32(a, z)
+            spans.append((j, c0, n))
+        state, outs = _step_kernel(
+            self._run_block(), jnp.asarray(ctrl), self._S,
+            self._kill_rows(), self._burst, self._preempt, self._iscale2,
+            self._mem_tab, self._shuf_tab)
+        self.dispatches += 1
+        state = np.asarray(state)
+        outs = np.asarray(outs)
+        results = []
+        for req, (j, c0, n) in zip(requests, spans):
+            s = self._slots[j]
+            s.clock = F32(state[j, 0])
+            s.interf = F32(state[j, 1])
+            s.cursor = c0 + n
+            s.stage_idx += n
+            comp, fails = self._records(req, s, outs, j, c0, n)
+            results.append(SimStepResult(component=comp, failures=fails,
+                                         clock_end=float(s.clock)))
+        return results
+
+    def _records(self, req, s: _Slot, outs: np.ndarray, j: int, c0: int,
+                 n: int, row0: int = 0
+                 ) -> Tuple[ComponentRecord, List[float]]:
+        a, z = int(req.start_scaleout), int(req.end_scaleout)
+        stages, fails = [], []
+        for i in range(n):
+            r = outs[row0 + i, j]
+            sa = a if i == 0 else z
+            ov = float(overhead_f32(a, z)) if i == 0 else 0.0
+            nfail = int(r[_O_FAILED])
+            stages.append(StageRecord(
+                name=s.tables.names[c0 + i],
+                start=r[_O_CLK],
+                runtime=r[_O_RT],
+                start_scaleout=float(sa), end_scaleout=float(z),
+                time_fraction=1.0 if sa == z else 0.8,
+                overhead=ov,
+                metrics=r[_O_MET].copy(),
+                failures=nfail))
+            if nfail:
+                fails.extend(float(w) for w, h in
+                             zip(r[_O_WHEN], r[_O_HIT]) if h)
+        return ComponentRecord(req.comp_idx, stages), fails
+
+    # ------------------------------------------------------------- full run
+    def run_full(self, a_sched: np.ndarray, z_sched: np.ndarray,
+                 inject_failures: bool = False
+                 ) -> List[Tuple[List[ComponentRecord], List[float]]]:
+        """One ENTIRE run of every registered job in a single dispatch.
+
+        ``a_sched``/``z_sched``: (J, C_max) integer scale-out schedules
+        (component c of job j starts at ``a_sched[j, c]`` and runs at
+        ``z_sched[j, c]``); rescale decisions are fixed upfront, which is
+        what profiling runs and scenario replays need.  Returns per job the
+        component records and observed kill seconds.
+        """
+        self._build()
+        J, T = self._J, self._T
+        for j in range(J):
+            self.begin_run(j)
+        fbuf = np.zeros((T, J, _NF), F32)
+        fbuf[:, :, _F_STRAG] = 1.0
+        ibuf = np.zeros((T, J, 2), np.int32)  # z | inject (a is host-side)
+        ibuf[:, :, 0] = 4
+        vbuf = np.zeros((T, J), bool)
+        for j, s in enumerate(self._slots):
+            tj = s.tables.total_stages
+            fbuf[:tj, j, _F_NOISE] = s.noise
+            fbuf[:tj, j, _F_TAB] = self._tabpack[j]
+            fbuf[:tj, j, _F_CPU0:_F_IO0 + 1] = self._scalpack[j]
+            fbuf[:tj, j, _F_STRAG] = self._strag_slice(j, tj)
+            comp = s.tables.comp_of
+            first = s.tables.first_of_comp
+            zs = z_sched[j, comp].astype(np.int32)
+            as_ = np.where(first, a_sched[j, comp], zs).astype(np.int32)
+            # overhead in the shared f32 op order (4 + 0.35*|z-a|, first
+            # stage of a rescaling component only) — vectorized
+            d = np.abs(zs - as_).astype(F32)
+            fbuf[:tj, j, _F_OV] = np.where(
+                first & (as_ != zs), F32(4.0) + F32(0.35) * d, F32(0.0))
+            ibuf[:tj, j, 0] = zs
+            ibuf[:, j, 1] = int(inject_failures or
+                                s.scenario.inject_failures)
+            vbuf[:tj, j] = True
+        state0 = np.zeros((J, 2), F32)
+        state0[:, 1] = [s.interf for s in self._slots]
+        state, outs = _run_stages(
+            jnp.asarray(state0), jnp.asarray(fbuf), jnp.asarray(ibuf),
+            jnp.asarray(vbuf), self._kill_rows(), self._burst,
+            self._preempt, self._iscale2, self._mem_tab, self._shuf_tab)
+        self.dispatches += 1
+        state = np.asarray(state)
+        outs = np.asarray(outs)
+        results = []
+        for j, s in enumerate(self._slots):
+            s.clock = F32(state[j, 0])
+            s.interf = F32(state[j, 1])
+            s.cursor = s.tables.total_stages
+            s.stage_idx += s.tables.total_stages
+            comps, fails = [], []
+            for c in range(s.job.n_components):
+                c0 = int(s.tables.comp_start[c])
+                n = int(s.tables.n_stages[c])
+                req = SimStepRequest(j, c, int(a_sched[j, c]),
+                                     int(z_sched[j, c]), 0.0,
+                                     bool(ibuf[0, j, 1]))
+                comp, cf = self._records(req, s, outs, j, c0, n, row0=c0)
+                comps.append(comp)
+                fails.extend(cf)
+            results.append((comps, fails))
+        return results

@@ -1,0 +1,154 @@
+"""Cross-context evaluation harness: scenario x job target-compliance grid
+plus the paper's model-reuse claim as measurable transfer cells.
+
+Two entry points, both emitting benchmark-JSON-ready rows
+(``benchmarks/scenario_suite.py`` merges them into ``BENCH_decision.json``):
+
+* :func:`run_scenario_campaign` — one disturbance scenario over a fleet of
+  jobs driven through :class:`~repro.dataflow.fleet.FleetCampaign`
+  (profiling -> adaptive runs, decisions cross-batched, simulation on the
+  vectorized engine by default).  The ``multi_tenant`` scenario routes
+  through :meth:`FleetCampaign.arrival_campaign` instead: Poisson arrivals
+  into a bounded executor pool with capacity-capped picks.
+* :func:`run_transfer_cells` — train the Enel model under execution context
+  A (scenario, dataset size), then deploy it under context B WITHOUT a
+  scratch retrain (only target calibration + the runner's normal online
+  fine-tune cadence), and measure target compliance in the deploy context
+  ("one model can be reused across different execution contexts", §I/§VI;
+  evaluation style after C3O's cross-context runtime prediction).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.dataflow.fleet import FleetCampaign
+from repro.dataflow.runner import JobExperiment, RunStats
+from repro.sim.engine import BatchedClusterSim
+from repro.sim.scenarios import make_scenario
+
+DEFAULT_JOBS = ("lr", "mpc", "kmeans", "gbt")
+DEFAULT_SCENARIOS = ("baseline", "node_failure", "stragglers",
+                     "spot_preemption", "interference_burst",
+                     "data_skew_drift")
+# (train_scenario, train_size) -> (deploy_scenario, deploy_size) per job
+DEFAULT_TRANSFER_CELLS = (
+    ("baseline", 1.0, "node_failure", 1.0, "kmeans"),
+    ("baseline", 1.0, "interference_burst", 1.0, "gbt"),
+    ("baseline", 1.0, "baseline", 1.6, "kmeans"),
+    ("node_failure", 1.0, "stragglers", 1.25, "gbt"),
+)
+
+
+def _adaptive_rows(stats: Sequence[RunStats]) -> Dict:
+    sel = [s for s in stats if s is not None and s.kind not in ("profiling",)]
+    if not sel:
+        return {"runs": 0}
+    cvc = np.array([s.cvc for s in sel], float)
+    cvs = np.array([s.violation / 60.0 for s in sel], float)
+    return {"runs": len(sel),
+            "compliance": float(1.0 - cvc.mean()),
+            "cvs_mean_min": float(cvs.mean()),
+            "rescales_mean": float(np.mean([s.n_rescales for s in sel])),
+            "failures_total": int(sum(s.n_failures for s in sel)),
+            "runtime_mean_s": float(np.mean([s.runtime for s in sel])),
+            "target_s": float(sel[0].target)}
+
+
+def run_scenario_campaign(scenario_name: str,
+                          job_keys: Sequence[str] = DEFAULT_JOBS, *,
+                          engine: str = "batched", seed: int = 0,
+                          profile_runs: int = 3, adaptive_runs: int = 3,
+                          candidate_stride: int = 2) -> List[Dict]:
+    """Run one scenario over a job fleet; returns one row per job plus a
+    scenario summary row (fleet decisions/sec, wall time)."""
+    sc = make_scenario(scenario_name, seed=seed)
+    # one shared vectorized engine for the whole fleet, handed to every
+    # experiment up front (no throwaway per-experiment backends)
+    shared = BatchedClusterSim() if engine == "batched" else None
+    exps = [JobExperiment(k, seed=seed + i, scenario=sc,
+                          candidate_stride=candidate_stride, engine=engine,
+                          backend=shared)
+            for i, k in enumerate(job_keys)]
+    campaign = FleetCampaign(exps)
+    campaign.profile(profile_runs)
+    t0 = time.time()
+    if sc.pool_size > 0:                       # multi-tenant capacity model
+        stats, trace = campaign.arrival_campaign(
+            pool_size=sc.pool_size, arrival_rate=sc.arrival_rate,
+            inject_failures=sc.inject_failures, seed=seed)
+        per_exp = [[st] for st in stats]
+        extra = {"pool_size": sc.pool_size,
+                 "max_pool_used": max((t.pool_used for t in trace),
+                                      default=0),
+                 "capped_decisions": sum(t.capped_decisions for t in trace),
+                 "rounds": len(trace)}
+    else:
+        per_exp = [[] for _ in exps]
+        for _ in range(adaptive_runs):
+            for st, acc in zip(campaign.adaptive_round(
+                    "enel", inject_failures=sc.inject_failures), per_exp):
+                acc.append(st)
+        extra = {}
+    wall = time.time() - t0
+    decisions = sum(st.decide_calls for acc in per_exp for st in acc
+                    if st is not None)
+    rows = []
+    for exp, acc in zip(exps, per_exp):
+        row = {"scenario": scenario_name, "job": exp.job_key,
+               "engine": engine, "seed": seed}
+        row.update(_adaptive_rows(acc))
+        rows.append(row)
+    rows.append({"scenario": scenario_name, "job": "__fleet__",
+                 "engine": engine, "seed": seed, "fleet_size": len(exps),
+                 "wall_s_adaptive": wall,
+                 "decisions": decisions,
+                 "decisions_per_s": decisions / max(wall, 1e-9), **extra})
+    return rows
+
+
+def run_transfer_cell(train_scenario: str, train_size: float,
+                      deploy_scenario: str, deploy_size: float,
+                      job_key: str, *, engine: str = "batched",
+                      seed: int = 0, profile_runs: int = 3,
+                      train_runs: int = 2, calibrate_runs: int = 3,
+                      adaptive_runs: int = 3,
+                      candidate_stride: int = 2) -> Dict:
+    """Train under context A, deploy (reuse, no scratch retrain) under
+    context B; returns one row with compliance in the deploy context."""
+    sc_a = make_scenario(train_scenario, seed=seed)
+    train = JobExperiment(job_key, seed=seed, scenario=sc_a,
+                          size_scale=train_size, engine=engine,
+                          candidate_stride=candidate_stride)
+    train.profile(profile_runs)
+    for _ in range(train_runs):
+        train.adaptive_run("enel", inject_failures=sc_a.inject_failures)
+    sc_b = make_scenario(deploy_scenario, seed=seed + 1)
+    deploy = JobExperiment(job_key, seed=seed + 100, scenario=sc_b,
+                           size_scale=deploy_size, engine=engine,
+                           candidate_stride=candidate_stride,
+                           share_models_from=train)
+    # the transplanted model keeps its weights: only the runtime target is
+    # calibrated in the new context (plus the normal online fine-tunes)
+    deploy.calibrate_target(calibrate_runs)
+    stats = [deploy.adaptive_run("enel",
+                                 inject_failures=sc_b.inject_failures)
+             for _ in range(adaptive_runs)]
+    row = {"train_scenario": train_scenario, "train_size": train_size,
+           "deploy_scenario": deploy_scenario, "deploy_size": deploy_size,
+           "job": job_key, "engine": engine, "seed": seed}
+    row.update(_adaptive_rows(stats))
+    # prediction quality of the reused model in the NEW context
+    pred = [(s.predicted, s.runtime) for s in stats
+            if s.predicted is not None]
+    if pred:
+        row["pred_rel_err_mean"] = float(np.mean(
+            [abs(p - r) / max(r, 1e-9) for p, r in pred]))
+    return row
+
+
+def run_transfer_cells(cells=DEFAULT_TRANSFER_CELLS, **kw) -> List[Dict]:
+    return [run_transfer_cell(a, sa, b, sb, job, **kw)
+            for a, sa, b, sb, job in cells]

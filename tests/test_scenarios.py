@@ -1,0 +1,191 @@
+"""Scenario generators produce their documented disturbance signatures;
+capacity-capped picks and arrival campaigns respect the executor pool;
+cross-context experiment plumbing works end to end."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.service import apply_capacity
+from repro.dataflow.simulator import ClusterSim
+from repro.dataflow.workloads import JOBS, scale_job
+from repro.sim.scenarios import (BASELINE, SCENARIO_NAMES, Scenario,
+                                 make_scenario)
+from repro.sim.tables import T_STRAGGLER, W_MAX
+
+
+def _trace(scenario, seed=17, job_key="kmeans", s=16, runs=1, inject=False):
+    """Per-stage runtimes of a seeded run sequence under one scenario."""
+    sim = ClusterSim(seed=seed, scenario=scenario)
+    out = []
+    for _ in range(runs):
+        sim.begin_run()
+        clock = 0.0
+        for k in range(JOBS[job_key].n_components):
+            comp = sim.run_component(
+                JOBS[job_key], k, clock=clock, start_scaleout=s,
+                end_scaleout=s,
+                inject_failures=inject or scenario.inject_failures,
+                failures_log=[])
+            out.extend(
+                (k, st.name, np.float32(st.runtime), st.metrics.copy())
+                for st in comp.stages)
+            clock = comp.stages[-1].start + comp.stages[-1].runtime
+    return out
+
+
+def test_registry_names_and_composition():
+    assert set(SCENARIO_NAMES) >= {"baseline", "node_failure", "stragglers",
+                                   "spot_preemption", "interference_burst",
+                                   "data_skew_drift", "multi_tenant"}
+    composed = make_scenario("stragglers", seed=3, inject_failures=True)
+    assert composed.straggler_prob > 0 and composed.inject_failures
+    with pytest.raises(KeyError):
+        make_scenario("nope")
+
+
+def test_scenario_determinism():
+    a = _trace(make_scenario("stragglers", seed=2), runs=2)
+    b = _trace(make_scenario("stragglers", seed=2), runs=2)
+    assert [x[2] for x in a] == [x[2] for x in b]
+
+
+def test_straggler_signature():
+    """Stragglers multiply some stages by the seeded tail factor and leave
+    the rest EXACTLY at baseline (same sim seed => same noise stream)."""
+    sc = make_scenario("stragglers", seed=6)
+    base = _trace(BASELINE)
+    strag = _trace(sc)
+    tab = sc.window_tables(17)["straggler"]
+    frac_straggled = float(np.mean(tab != 1.0))
+    assert 0.03 < frac_straggled < 0.3          # ~straggler_prob of stages
+    slowed = 0
+    for (_, _, tb, _), (_, _, ts, _) in zip(base, strag):
+        assert ts >= tb or np.isclose(ts, tb)
+        slowed += ts > tb * 1.001
+    assert slowed >= 1
+    assert sum(x[2] for x in strag) > sum(x[2] for x in base)
+
+
+def test_interference_burst_signature():
+    """Burst windows multiply the AR(1) innovation: runtimes are pointwise
+    >= the same-seed baseline, with a real elevation once a burst hits."""
+    sc = make_scenario("interference_burst", seed=8)
+    tab = sc.window_tables(17)["burst"]
+    assert set(np.unique(tab)) <= {np.float32(1.0),
+                                   np.float32(sc.burst_mult)}
+    assert (tab > 1.0).any(), "seeded Markov chain must enter a burst"
+    base = _trace(BASELINE, runs=2)
+    burst = _trace(sc, runs=2)
+    assert all(tb2 >= tb1 for (_, _, tb1, _), (_, _, tb2, _)
+               in zip(base, burst))
+    assert sum(x[2] for x in burst) > sum(x[2] for x in base) * 1.01
+
+
+def test_spot_preemption_signature():
+    """Preempted windows lose 2..preempt_max executors: affected stages run
+    at a lower effective scale-out (higher memory pressure in metrics)."""
+    sc = make_scenario("spot_preemption", seed=4, preempt_prob=0.5)
+    tab = sc.window_tables(17)["preempt"]
+    assert tab.max() >= 2 and tab.max() <= sc.preempt_max
+    base = _trace(BASELINE, runs=2)
+    pre = _trace(sc, runs=2)
+    changed = [(b, p) for b, p in zip(base, pre) if b[2] != p[2]]
+    assert changed, "some stages must hit a preempted window"
+    for b, p in changed:
+        assert p[3][3] >= b[3][3]               # gc_frac (mem pressure) up
+
+
+def test_data_skew_drift_signature():
+    """Input growth compounds per component: component 0 is untouched,
+    later iterations are strictly slower than the same-seed baseline."""
+    sc = make_scenario("data_skew_drift", seed=5)
+    base = _trace(BASELINE)
+    skew = _trace(sc)
+    comp0_b = [x for x in base if x[0] == 0]
+    comp0_s = [x for x in skew if x[0] == 0]
+    assert [x[2] for x in comp0_b] == [x[2] for x in comp0_s]
+    last = max(x[0] for x in base)
+    late_b = sum(x[2] for x in base if x[0] >= last - 1)
+    late_s = sum(x[2] for x in skew if x[0] >= last - 1)
+    assert late_s > late_b * 1.1
+
+
+def test_node_failure_scenario_forces_injection():
+    sc = make_scenario("node_failure", seed=1)
+    sim = ClusterSim(seed=3, scenario=sc)
+    log = []
+    clock = 0.0
+    sim.begin_run()
+    for k in range(JOBS["kmeans"].n_components):
+        comp = sim.run_component(JOBS["kmeans"], k, clock=clock,
+                                 start_scaleout=24, end_scaleout=24,
+                                 inject_failures=sc.inject_failures,
+                                 failures_log=log)
+        clock = comp.stages[-1].start + comp.stages[-1].runtime
+    assert log, "node_failure scenario must inject kills"
+
+
+def test_scale_job_scales_parallel_work_only():
+    job = JOBS["gbt"]
+    big = scale_job(job, 2.0)
+    assert big.dataset.size_gb == job.dataset.size_gb * 2
+    for a, b in zip(job.prep, big.prep):
+        assert b.parallel == a.parallel * 2
+        assert b.serial == a.serial and b.comm == a.comm
+    # more data -> longer at the same scale-out
+    assert big.base_runtime(16) > job.base_runtime(16)
+
+
+# ------------------------------------------------------------- capacity caps
+def _mk_request(cands, valid=None):
+    from repro.core.service import DecisionRequest
+    cands = np.asarray(cands, np.float32)
+    valid = np.ones(len(cands), bool) if valid is None else valid
+    return DecisionRequest(
+        params={}, base={}, h_onehot=np.zeros((1, 1), np.float32),
+        deltas={}, edge_dst=np.zeros((1, 1), np.int32),
+        edge_src=np.zeros((1, 1), np.int32),
+        edge_valid=np.zeros((1, 1), bool), candidates=cands,
+        cand_valid=valid, elapsed=0.0, target=100.0, levels=2,
+        candidate_list=[int(c) for c in cands], n_components=1)
+
+
+def test_apply_capacity_masks_candidates():
+    req = _mk_request([4, 8, 16, 24, 36])
+    capped = apply_capacity(req, 16)
+    assert list(capped.cand_valid) == [True, True, True, False, False]
+    assert apply_capacity(req, 36) is req       # cap does not bind
+    floor = apply_capacity(req, 2)              # below every candidate
+    assert list(floor.cand_valid) == [True, False, False, False, False]
+
+
+def test_arrival_campaign_pool_invariant():
+    """Poisson arrivals into a bounded pool: allocations never exceed the
+    pool even when a job is admitted AFTER another's scale-up was granted
+    (arrival_rate=1, seed=2 staggers admissions across rounds)."""
+    from repro.dataflow import FleetCampaign, JobExperiment
+    exps = [JobExperiment("kmeans", seed=70 + i, engine="batched")
+            for i in range(3)]
+    campaign = FleetCampaign(exps, engine="batched")
+    campaign.profile(2)
+    stats, trace = campaign.arrival_campaign(pool_size=30, arrival_rate=1.0,
+                                             seed=2)
+    assert all(st is not None for st in stats), "all jobs must complete"
+    assert trace and all(t.pool_used <= t.pool_size for t in trace)
+    arrival_rounds = [t.round_idx for t in trace if t.arrivals]
+    assert len(arrival_rounds) >= 2, "admissions should stagger"
+    for st in stats:
+        assert all(s <= 30 for s in st.scaleouts), \
+            "a pick exceeded the executor pool"
+
+
+def test_transfer_experiment_shares_models():
+    from repro.dataflow import JobExperiment
+    src = JobExperiment("gbt", seed=1)
+    dst = JobExperiment("gbt", seed=2, size_scale=1.5,
+                        scenario=make_scenario("stragglers", seed=1),
+                        share_models_from=src)
+    assert dst.trainer is src.trainer and dst.enel is src.enel
+    assert dst.job.dataset.size_gb == JOBS["gbt"].dataset.size_gb * 1.5
+    assert dst.sim.scenario.name == "stragglers"

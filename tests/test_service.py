@@ -230,6 +230,52 @@ def test_template_device_cache_lru_eviction():
     assert cache.evictions == 2
 
 
+# ------------------------------------------- double-buffered dispatch parity
+def test_double_buffered_dispatch_matches_sync(fleet_exps):
+    """Overlapped stack-next-while-device-computes dispatch returns exactly
+    the synchronous path's decisions (same picks, totals, diagnostics)."""
+    kwargs = [_decision_kwargs(exp) for exp in fleet_exps]
+    for exp, kw in zip(fleet_exps, kwargs):
+        exp.enel.prepare_request(**kw)          # warm probe caches
+    def requests():
+        reqs = []
+        for i, (exp, kw) in enumerate(zip(fleet_exps, kwargs)):
+            exp.encoder.rng = np.random.RandomState(2000 + i)
+            reqs.append(exp.enel.prepare_request(**kw))
+        return reqs
+    sync = DecisionService(double_buffer=False)
+    buf = DecisionService(double_buffer=True)
+    res_s = sync.decide(requests())
+    res_b = buf.decide(requests())
+    assert sync.dispatches == buf.dispatches
+    for a, b in zip(res_s, res_b):
+        assert a.scaleout == b.scaleout
+        assert a.predicted == b.predicted
+        assert a.totals == b.totals
+        np.testing.assert_array_equal(a.per_component, b.per_component)
+
+
+# ----------------------------------------------- cross-engine runner parity
+def test_runner_parity_numpy_vs_batched_engine():
+    """Same seed -> identical RunRecords and decisions through the FULL
+    runner (profiling targets, adaptive scale-out trajectory) whether the
+    simulation runs on the numpy event loop or the vectorized engine."""
+    from repro.dataflow.runner import JobExperiment
+    en = JobExperiment("gbt", seed=9, engine="numpy")
+    eb = JobExperiment("gbt", seed=9, engine="batched")
+    en.profile(2)
+    eb.profile(2)
+    for a, b in zip(en.stats, eb.stats):
+        assert np.float32(a.runtime) == np.float32(b.runtime)
+    assert en.target == eb.target
+    sa = en.adaptive_run("enel", inject_failures=True)
+    sb = eb.adaptive_run("enel", inject_failures=True)
+    assert np.float32(sa.runtime) == np.float32(sb.runtime)
+    assert sa.scaleouts == sb.scaleouts
+    assert sa.n_failures == sb.n_failures
+    assert sa.n_rescales == sb.n_rescales
+
+
 # ------------------------------------------------------- device pick parity
 def test_pick_candidate_matches_host_pick():
     cand = np.array([4, 6, 8, 10, 12, 12], np.float32)

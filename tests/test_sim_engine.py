@@ -1,0 +1,195 @@
+"""Vectorized sim engine vs numpy reference: bit-parity, seeded failure
+injector, noise-stream discipline."""
+import numpy as np
+import pytest
+
+from repro.dataflow.simulator import ClusterSim, RETRY_PENALTY
+from repro.dataflow.workloads import JOBS, StageSpec
+from repro.sim.engine import (BatchedClusterSim, NumpySimBackend,
+                              SimStepRequest)
+from repro.sim.scenarios import make_scenario
+from repro.sim.tables import F32, N_NOISE, R_MAX, W_MAX
+
+
+def _assert_same_component(cn, cb, ctx=""):
+    for sn, sb in zip(cn.stages, cb.stages):
+        assert np.float32(sn.start) == np.float32(sb.start), (ctx, sn.name)
+        assert np.float32(sn.runtime) == np.float32(sb.runtime), \
+            (ctx, sn.name, sn.runtime, sb.runtime)
+        assert sn.start_scaleout == sb.start_scaleout
+        assert sn.end_scaleout == sb.end_scaleout
+        assert sn.failures == sb.failures, (ctx, sn.name)
+        np.testing.assert_array_equal(sn.metrics, sb.metrics, err_msg=ctx)
+
+
+def _run_pair(npb, bb, jobs, n_runs=2, inject=True, seed=123):
+    """Drive both backends through identical schedules; assert records are
+    bit-identical (runtimes, metrics, failures, clocks)."""
+    rng = np.random.RandomState(seed)
+    for r in range(n_runs):
+        for j in range(len(jobs)):
+            npb.begin_run(j)
+            bb.begin_run(j)
+        clocks = [0.0] * len(jobs)
+        s_prev = [int(rng.choice([8, 16, 33]))] * len(jobs)
+        s_cur = list(s_prev)
+        c_max = max(job.n_components for job in jobs)
+        for k in range(c_max):
+            idxs = [j for j, job in enumerate(jobs)
+                    if k < job.n_components]
+            reqs_n = [SimStepRequest(j, k, s_prev[j], s_cur[j], clocks[j],
+                                     inject) for j in idxs]
+            reqs_b = [SimStepRequest(j, k, s_prev[j], s_cur[j], clocks[j],
+                                     inject) for j in idxs]
+            res_n = npb.step(reqs_n)
+            res_b = bb.step(reqs_b)          # ONE dispatch for all jobs
+            for j, rn, rb in zip(idxs, res_n, res_b):
+                ctx = f"run={r} comp={k} job={jobs[j].name}"
+                _assert_same_component(rn.component, rb.component, ctx)
+                assert rn.failures == rb.failures, ctx
+                assert np.float32(rn.clock_end) == np.float32(rb.clock_end)
+                clocks[j] = rb.clock_end
+                s_prev[j] = s_cur[j]
+                s_cur[j] = int(rng.choice([4, 8, 16, 24, 36]))
+
+
+def test_engine_bit_parity_batch1_all_jobs():
+    """Acceptance: batched engine == numpy reference bit-for-bit at batch=1
+    on all 4 jobs (seeded, failures injected, random rescale schedules)."""
+    for i, key in enumerate(("lr", "mpc", "kmeans", "gbt")):
+        sc = make_scenario("node_failure", seed=3)
+        npb, bb = NumpySimBackend(), BatchedClusterSim()
+        npb.register(JOBS[key], seed=40 + i, scenario=sc)
+        bb.register(JOBS[key], seed=40 + i, scenario=sc)
+        _run_pair(npb, bb, [JOBS[key]], n_runs=2, seed=7 + i)
+
+
+def test_engine_bit_parity_fleet_mixed_scenarios():
+    """One batched backend, four jobs, four DIFFERENT scenarios riding the
+    same dispatches — still bit-identical to four sequential numpy sims."""
+    combos = [("lr", "stragglers"), ("mpc", "interference_burst"),
+              ("kmeans", "spot_preemption"), ("gbt", "data_skew_drift")]
+    npb, bb = NumpySimBackend(), BatchedClusterSim()
+    jobs = []
+    for i, (key, scn) in enumerate(combos):
+        sc = make_scenario(scn, seed=5)
+        npb.register(JOBS[key], seed=60 + i, scenario=sc)
+        bb.register(JOBS[key], seed=60 + i, scenario=sc)
+        jobs.append(JOBS[key])
+    _run_pair(npb, bb, jobs, n_runs=2, seed=11)
+
+
+def test_run_full_matches_stepped_reference():
+    """Whole-run single-dispatch path == per-component numpy event loop."""
+    jobs = [JOBS[k] for k in ("kmeans", "gbt", "kmeans")]
+    sc = make_scenario("node_failure", seed=2)
+    npb, bb = NumpySimBackend(), BatchedClusterSim()
+    for i, job in enumerate(jobs):
+        npb.register(job, seed=80 + i, scenario=sc)
+        bb.register(job, seed=80 + i, scenario=sc)
+    rng = np.random.RandomState(1)
+    c_max = max(j.n_components for j in jobs)
+    a = rng.choice([8, 16, 24], (len(jobs), c_max)).astype(np.int32)
+    z = rng.choice([8, 16, 24, 36], (len(jobs), c_max)).astype(np.int32)
+    full = bb.run_full(a, z, inject_failures=True)
+    for j, job in enumerate(jobs):
+        npb.begin_run(j)
+        clock, fails = 0.0, []
+        for c in range(job.n_components):
+            r = npb.step([SimStepRequest(j, c, int(a[j, c]), int(z[j, c]),
+                                         clock, True)])[0]
+            clock = r.clock_end
+            fails.extend(r.failures)
+            _assert_same_component(r.component, full[j][0][c],
+                                   f"job {j} comp {c}")
+        assert fails == full[j][1]
+
+
+# --------------------------------------------------- failure injector (bugfix)
+def test_kill_seconds_come_from_per_window_table():
+    """The injector draws ONE seeded kill second per (run, window) — every
+    observed failure must equal a kill_time table entry of its window, and
+    a window can kill at most once per run."""
+    sim = ClusterSim(seed=9, scenario=make_scenario("node_failure", seed=0))
+    job = JOBS["lr"]
+    sim.begin_run()
+    kill_row = sim._win["kill_time"][sim.run_idx % R_MAX]
+    log = []
+    clock = 0.0
+    for k in range(job.n_components):
+        comp = sim.run_component(job, k, clock=clock, start_scaleout=16,
+                                 end_scaleout=16, inject_failures=True,
+                                 failures_log=log)
+        clock = comp.stages[-1].start + comp.stages[-1].runtime
+    assert log, "a multi-window run at z=16 must observe kills"
+    windows = [int(t // 90.0) for t in log]
+    assert len(set(windows)) == len(windows), "a window killed twice"
+    for t, w in zip(log, windows):
+        assert np.float32(t) == kill_row[min(w, W_MAX - 1)]
+
+
+def test_adjacent_stages_agree_on_window_kill():
+    """Regression for the per-run draw bug: two stages overlapping the same
+    window see the SAME kill second, so exactly one of them records it."""
+    sim = ClusterSim(seed=4, scenario=make_scenario("node_failure", seed=0))
+    spec = StageSpec("half", 46.0, 0.0, 0.0)     # ~46s: two stages span w0
+    log = []
+    clock = np.float32(0.0)
+    recs = []
+    for _ in range(4):                           # covers windows 0..1+
+        rec = sim.run_stage(spec, start_scaleout=8, end_scaleout=8,
+                            clock=clock, rescale_overhead=0.0,
+                            inject_failures=True, failures_log=log)
+        recs.append(rec)
+        clock = rec.start + rec.runtime
+    windows = [int(t // 90.0) for t in log]
+    assert len(set(windows)) == len(windows)
+    # every fully-covered window fired exactly once
+    n_windows = int(clock // 90.0)
+    assert len(log) >= n_windows
+
+
+def test_failure_injection_determinism():
+    """Same seeds -> identical failure trajectories (and different run
+    indices -> different kill rows)."""
+    def failures(seed):
+        sim = ClusterSim(seed=seed,
+                         scenario=make_scenario("node_failure", seed=1))
+        out = []
+        for _ in range(2):
+            sim.begin_run()
+            log = []
+            clock = 0.0
+            for k in range(JOBS["kmeans"].n_components):
+                comp = sim.run_component(JOBS["kmeans"], k, clock=clock,
+                                         start_scaleout=24, end_scaleout=24,
+                                         inject_failures=True,
+                                         failures_log=log)
+                clock = comp.stages[-1].start + comp.stages[-1].runtime
+            out.append(tuple(log))
+        return out
+
+    a, b = failures(5), failures(5)
+    assert a == b
+    assert a[0] != a[1], "per-run kill rows must differ"
+
+
+def test_noise_stream_layout():
+    """A run's noise block drawn upfront equals the reference's sequential
+    per-stage draws (the property the batched engine relies on)."""
+    r1 = np.random.RandomState(0)
+    seq = np.stack([r1.randn(N_NOISE) for _ in range(10)])
+    r2 = np.random.RandomState(0)
+    block = r2.randn(10 * N_NOISE).reshape(10, N_NOISE)
+    np.testing.assert_array_equal(seq, block)
+
+
+def test_retry_penalty_charged_per_failure():
+    sim = ClusterSim(seed=0, scenario=make_scenario("node_failure", seed=0))
+    spec = StageSpec("long", 250.0, 0.0, 0.0)
+    log = []
+    rec = sim.run_stage(spec, start_scaleout=8, end_scaleout=8,
+                        clock=0.0, rescale_overhead=0.0,
+                        inject_failures=True, failures_log=log)
+    assert rec.failures >= 2                    # windows 0 and 1 covered
+    assert rec.runtime > 250.0 + RETRY_PENALTY * rec.failures * 0.5
