@@ -133,12 +133,21 @@ def measure_budget(adaptive_runs: int = 2,
             except StopIteration:
                 pass
     compiles = enel_model.trace_count("fleet_sweep")
+    svc = campaign.service
     return {"adaptive_runs_per_job": adaptive_runs,
             "visited_buckets": len(visited),
             "fleet_sweep_compiles": compiles,
             "bucket_bound": MAX_BUCKETS,
             "decisions": sum(st.decide_calls for e in exps
-                             for st in e.stats if st.kind == "enel")}
+                             for st in e.stats if st.kind == "enel"),
+            # fault-envelope health: a clean campaign must answer every
+            # decision from the model (all of these stay 0)
+            "fallback_decisions": svc.fallback_decisions,
+            "guardrail_trips": svc.guardrail_trips,
+            "retries": svc.retries,
+            "dispatch_failures": svc.dispatch_failures,
+            "breaker_trips": svc.breaker_trips,
+            "shed_requests": svc.shed_requests}
 
 
 def main(argv=None) -> int:

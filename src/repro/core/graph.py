@@ -462,6 +462,12 @@ def append_stacked(buffers: Dict, rows: Dict, idx) -> Dict:
     return _jit_helper("append", _append_stacked_impl)(buffers, rows, idx)
 
 
+# float keys scanned by the cache's non-finite quarantine (bool keys cannot
+# be non-finite; adj is bool too)
+_FINITE_KEYS = ("context", "metrics", "a_raw", "z_raw", "r", "runtime",
+                "overhead")
+
+
 class TrainingCache:
     """Device-resident ring buffer of stacked component graphs.
 
@@ -470,6 +476,14 @@ class TrainingCache:
     per-slot 0/1 weight vector for the loss — unfilled or padding slots are
     all-masked empty graphs with weight 0, so ring contents are equivalent
     to a one-shot :func:`stack_graphs` of the same graphs.
+
+    Quarantine guardrail: rows carrying non-finite values are REPLACED by
+    empty-graph rows and excluded from the loss weights (``slot_ok``).
+    Zero-weighting alone would not be enough — ``NaN * 0 == NaN``, so one
+    poisoned row inside the weighted loss reduction would still sink every
+    fit.  ``extend`` quarantines on the way in;
+    :meth:`quarantine_nonfinite` re-scans resident rows (self-healing after
+    in-place corruption, e.g. chaos injection).
     """
 
     def __init__(self, capacity: int, max_nodes: int = 8):
@@ -482,6 +496,8 @@ class TrainingCache:
         self.pos = 0          # next write slot
         self.count = 0        # filled slots
         self.latest = np.zeros(0, np.int64)   # slots of the last extend()
+        self.slot_ok = np.ones(self.capacity, bool)  # quarantine mask
+        self.quarantined = 0  # rows replaced by empty graphs (lifetime)
 
     def _grow(self, new_nodes: int) -> None:
         """Reallocate with more node slots, padding existing rows."""
@@ -510,6 +526,13 @@ class TrainingCache:
         if need > self.max_nodes:
             self._grow(pow2_bucket(need))
         rows = compact_rows(graphs, self.max_nodes)
+        ok = self._rows_finite(rows)
+        if not ok.all():                # quarantine poisoned rows on entry
+            empty = compact_rows([empty_graph(self.max_nodes)],
+                                 self.max_nodes)
+            for k in rows:
+                rows[k][~ok] = empty[k][0]
+            self.quarantined += int((~ok).sum())
         idx = (self.pos + np.arange(len(graphs))) % self.capacity
         self.buffers = append_stacked(
             self.buffers, {k: jnp.asarray(v) for k, v in rows.items()},
@@ -517,26 +540,86 @@ class TrainingCache:
         self.pos = int((self.pos + len(graphs)) % self.capacity)
         self.count = min(self.capacity, self.count + len(graphs))
         self.latest = idx
+        self.slot_ok[idx] = ok
         return idx
 
+    @staticmethod
+    def _rows_finite(rows: Dict[str, np.ndarray]) -> np.ndarray:
+        """(B,) bool: every float value of each stacked row is finite."""
+        ok = None
+        for k in _FINITE_KEYS:
+            v = np.asarray(rows[k])
+            fin = np.isfinite(v).all(axis=tuple(range(1, v.ndim)))
+            ok = fin if ok is None else (ok & fin)
+        return ok
+
+    def quarantine_nonfinite(self) -> int:
+        """Re-scan resident rows for non-finite values (one host fetch),
+        replace offenders with empty-graph rows and drop them from
+        ``slot_ok``.  Returns how many rows were newly quarantined —
+        the self-healing path after in-place buffer corruption."""
+        host = {k: np.asarray(self.buffers[k]) for k in _FINITE_KEYS}
+        bad = ~self._rows_finite(host) & self.slot_ok
+        n = int(bad.sum())
+        if n == 0:
+            return 0
+        import jax.numpy as jnp
+        empty = compact_rows([empty_graph(self.max_nodes)], self.max_nodes)
+        idx = np.flatnonzero(bad)
+        self.buffers = append_stacked(
+            self.buffers,
+            {k: jnp.asarray(np.repeat(v, n, axis=0))
+             for k, v in empty.items()},
+            jnp.asarray(idx))
+        self.slot_ok[idx] = False
+        self.quarantined += n
+        return n
+
     def full_batch(self):
-        """(device batch over ALL slots, per-slot weights) for scratch fits."""
+        """(device batch over ALL slots, per-slot weights) for scratch fits;
+        quarantined slots train with weight 0."""
         w = np.zeros(self.capacity, np.float32)
         w[:self.count] = 1.0
+        w *= self.slot_ok
         return self.buffers, w
 
     def latest_batch(self):
         """(gathered device batch, weights) over the newest extend(), padded
-        to a power-of-two row count so fine-tunes share one jit shape."""
+        to a power-of-two row count so fine-tunes share one jit shape;
+        quarantined slots train with weight 0."""
         import jax.numpy as jnp
         m = len(self.latest)
         b = pow2_bucket(max(m, 1))
         idx = np.zeros(b, np.int64)
         idx[:m] = self.latest
         w = np.zeros(b, np.float32)
-        w[:m] = 1.0
+        w[:m] = self.slot_ok[self.latest]
         return _jit_helper("gather", _gather_rows_impl)(
             self.buffers, jnp.asarray(idx)), w
+
+    # --------------------------------------------------- checkpoint support
+    def snapshot(self) -> Dict:
+        """Picklable host copy of the full ring state."""
+        return {"capacity": self.capacity, "max_nodes": self.max_nodes,
+                "pos": self.pos, "count": self.count,
+                "latest": self.latest.copy(),
+                "slot_ok": self.slot_ok.copy(),
+                "quarantined": self.quarantined,
+                "buffers": {k: np.asarray(v)
+                            for k, v in self.buffers.items()}}
+
+    @classmethod
+    def from_snapshot(cls, st: Dict) -> "TrainingCache":
+        import jax.numpy as jnp
+        cache = cls(st["capacity"], max_nodes=st["max_nodes"])
+        cache.buffers = {k: jnp.asarray(v)
+                         for k, v in st["buffers"].items()}
+        cache.pos = int(st["pos"])
+        cache.count = int(st["count"])
+        cache.latest = np.asarray(st["latest"]).copy()
+        cache.slot_ok = np.asarray(st["slot_ok"]).copy()
+        cache.quarantined = int(st["quarantined"])
+        return cache
 
     def stacked_host(self) -> Dict[str, np.ndarray]:
         """Host copy of the filled slots, oldest -> newest (tests/debug)."""

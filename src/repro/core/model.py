@@ -408,8 +408,23 @@ def pick_candidate(candidates: jax.Array, cand_valid: jax.Array,
     """Device-side :meth:`EnelScaler._pick`: index of the smallest compliant
     candidate scale-out, else the least-violating one.  ``candidates`` must
     be ascending over the valid entries (argmin then matches the host pick's
-    first-of-min tie-breaking)."""
+    first-of-min tie-breaking).
+
+    Guardrail: non-finite totals (a poisoned model) are treated as +inf so
+    they can neither look compliant (NaN <= target is False anyway) nor win
+    the least-violating argmin; callers still detect the condition via
+    :func:`sweep_totals_ok` and route to the fallback policy."""
+    totals = jnp.where(jnp.isfinite(totals), totals, jnp.inf)
     feasible = cand_valid & (totals <= target)
     idx_feasible = jnp.argmin(jnp.where(feasible, candidates, jnp.inf))
     idx_min = jnp.argmin(jnp.where(cand_valid, totals, jnp.inf))
     return jnp.where(feasible.any(), idx_feasible, idx_min)
+
+
+def sweep_totals_ok(totals: jax.Array, cand_valid: jax.Array) -> jax.Array:
+    """Divergence guardrail over one sweep's per-candidate totals: True iff
+    every VALID candidate's predicted total is finite.  Computed on device
+    and fetched alongside the pick (one transfer, no extra dispatch); a
+    False row routes that request to the model-free fallback policy."""
+    return jnp.all(jnp.where(cand_valid, jnp.isfinite(totals), True),
+                   axis=-1)

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bell import BellModel, initial_scaleout
+from repro.core.fallback import FallbackPolicy
 from repro.core.graph import (CTX_DIM, N_METRICS, ComponentGraph, NodeAttrs,
                               SWEEP_KEYS, SweepTemplate, bucket_sweep,
                               historical_summaries_batch, historical_summary,
@@ -146,6 +147,11 @@ class EnelScaler:
         self._last_result: Optional[DecisionResult] = None
         # device-resident template arrays reused across decision points
         self.template_cache = _TemplateDeviceCache()
+        # guardrail backstop for the single-job recommend() path (the fleet
+        # service carries its own policy): non-finite sweep totals never
+        # reach a pick — the bounded model-free clamp answers instead
+        self.fallback = FallbackPolicy()
+        self.fallback_decisions = 0
         # probe-derived structural masks per (comp idx, #predecessors): the
         # A/Z probe only reveals which node slots track the builder's a/z
         # arguments and the a != z time fractions — structural facts that a
@@ -315,6 +321,14 @@ class EnelScaler:
             np.float32(elapsed), np.float32(target_runtime))
         # single host transfer: the pick + the per-candidate totals
         idx, totals_np = jax.device_get((idx_dev, totals_dev))
+        if not np.isfinite(totals_np).all():    # guardrail: poisoned model
+            self.fallback_decisions += 1
+            best, pred = self.fallback.decide(
+                candidates, totals_np, current_scaleout, elapsed,
+                target_runtime)
+            totals = {s: float(t) for s, t in zip(candidates, totals_np)
+                      if np.isfinite(t)}
+            return best, pred, totals
         totals = {s: float(totals_np[i]) for i, s in enumerate(candidates)}
         best = candidates[int(idx)]
         self._note_sweep(candidates, DecisionResult(
@@ -327,7 +341,8 @@ class EnelScaler:
     def prepare_request(self, *, graph_builder: GraphBuilder, next_comp: int,
                         n_components: int, elapsed: float,
                         current_scaleout: int, target_runtime: float,
-                        current_summary: Optional[NodeAttrs] = None
+                        current_summary: Optional[NodeAttrs] = None,
+                        best_effort: bool = False
                         ) -> Optional[DecisionRequest]:
         """Build this job's pending decision as a shape-bucketed request for
         :class:`repro.core.service.DecisionService`.
@@ -378,7 +393,9 @@ class EnelScaler:
             edge_src=edge_src, edge_valid=edge_valid, candidates=cand_arr,
             cand_valid=cand_valid, elapsed=float(elapsed),
             target=float(target_runtime), levels=template.levels,
-            candidate_list=list(candidates), n_components=k_real)
+            candidate_list=list(candidates), n_components=k_real,
+            current_scaleout=int(current_scaleout),
+            best_effort=bool(best_effort))
 
     def apply_decision(self, request: DecisionRequest,
                        result: DecisionResult

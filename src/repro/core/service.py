@@ -15,6 +15,22 @@ recompilation-free service:
   (:func:`~repro.core.model.pick_candidate`); the host fetches the picked
   indices and per-candidate totals in a single transfer, and the (J, C, K)
   per-component diagnostics stay on device until someone asks.
+
+Fault tolerance (the control plane assumes the model CAN fail):
+
+* a per-row on-device ``isfinite`` reduce
+  (:func:`~repro.core.model.sweep_totals_ok`) rides the existing pick
+  transfer; rows whose valid totals are non-finite are answered by the
+  bounded model-free :class:`~repro.core.fallback.FallbackPolicy` instead
+  of a poisoned pick;
+* dispatch is wrapped in a retry envelope — capped exponential backoff with
+  seeded jitter under a per-call deadline — and a :class:`CircuitBreaker`
+  that trips the whole service into fallback mode after K consecutive
+  failed dispatches, then half-opens on a probe cadence;
+* overload shedding (the first piece of ROADMAP item 2's admission
+  control): above ``shed_capacity`` pending requests per call, excess
+  requests — best-effort ones first — are rejected to the fallback policy
+  without touching the dispatch path.
 """
 from __future__ import annotations
 
@@ -27,11 +43,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.fallback import FallbackPolicy
 from repro.core.graph import ladder_bucket
 from repro.core.model import (assemble_sweep_batch, pick_candidate,
-                              record_trace, sweep_sparse_totals)
+                              record_trace, sweep_sparse_totals,
+                              sweep_totals_ok)
 
 JOB_LADDER = (1, 2, 4, 8, 16, 32)       # job axis J (pad by repeating a row)
+
+
+class DispatchFault(RuntimeError):
+    """A decision dispatch failed (retryable)."""
+
+
+class DispatchTimeout(DispatchFault):
+    """A decision dispatch exceeded its deadline (chaos injection raises
+    this; a real deployment would raise it from an RPC timer)."""
 
 
 def _job_bucket(j: int) -> int:
@@ -52,6 +79,10 @@ class DecisionRequest:
     ``base``/``h_onehot`` may be device arrays (the scaler's template cache
     keeps them resident across decision points); ``deltas`` and the edge
     lists are fresh host arrays every decision.
+
+    ``current_scaleout`` carries the requester's live allocation so a
+    fallback answer can step FROM somewhere; ``best_effort`` marks requests
+    the service may shed first under overload.
     """
     params: Dict                      # this tenant's model parameters
     base: Dict                        # (K, N, ...) template arrays
@@ -67,6 +98,8 @@ class DecisionRequest:
     levels: int
     candidate_list: List[int]         # the real candidate scale-outs
     n_components: int                 # real K (pre-padding)
+    current_scaleout: int = 0         # requester's live allocation
+    best_effort: bool = False         # sheddable under overload
 
     @property
     def bucket_key(self):
@@ -82,6 +115,10 @@ class DecisionResult:
     call that produced it — the runner bills it to the run's decision
     latency instead of timing across its generator suspension (which,
     under fleet interleaving, would charge one job for the whole round).
+
+    ``fallback``/``shed`` flag decisions the model did not make: answered
+    by the heuristic policy (guardrail trip, breaker open, retries
+    exhausted) or rejected under overload, respectively.
     """
 
     def __init__(self, scaleout: int, predicted: float,
@@ -91,22 +128,34 @@ class DecisionResult:
         self.predicted = predicted
         self.totals = totals
         self.service_seconds = 0.0
+        self.fallback = False
+        self.shed = False
         self._per_dev = per_component_dev       # (C_bucket, K_bucket) device
         self._shape = (n_candidates, n_components)
         self._per_np: Optional[np.ndarray] = None
 
     @property
     def per_component(self) -> np.ndarray:
-        """(C, K) per-component predictions; device->host on first access."""
+        """(C, K) per-component predictions; device->host on first access.
+        Fallback decisions carry no sweep: their diagnostics read as 0."""
         if self._per_np is None:
-            c, k = self._shape
-            self._per_np = np.asarray(self._per_dev)[:c, :k]
+            if self._per_dev is None:
+                self._per_np = np.zeros(self._shape, np.float32)
+            else:
+                c, k = self._shape
+                self._per_np = np.asarray(self._per_dev)[:c, :k]
         return self._per_np
 
 
 def _fleet_impl(params, base, h_onehot, deltas, edge_dst, edge_src,
                 edge_valid, cand, cand_valid, elapsed, target, levels):
-    """vmap over the job axis: assemble + sparse sweep + on-device pick."""
+    """vmap over the job axis: assemble + sparse sweep + on-device pick.
+
+    Returns per job row (pick index, per-candidate totals, (C, K)
+    per-component predictions, finite-totals ok flag).  The ok reduce is
+    folded into this dispatch so the guardrail costs no extra dispatch and
+    rides the existing pick+totals transfer.
+    """
     record_trace("fleet_sweep")
 
     def one(p, b, oh, d, ed, es, ev, cd, cv, el, tg):
@@ -118,7 +167,8 @@ def _fleet_impl(params, base, h_onehot, deltas, edge_dst, edge_src,
                                   levels).reshape(c, k)
         totals = per.sum(axis=1) + el
         idx = pick_candidate(cd, cv, totals, tg)
-        return idx, totals, per
+        ok = sweep_totals_ok(totals, cv)
+        return idx, totals, per, ok
 
     return jax.vmap(one)(params, base, h_onehot, deltas, edge_dst, edge_src,
                          edge_valid, cand, cand_valid, elapsed, target)
@@ -148,6 +198,57 @@ def apply_capacity(request: DecisionRequest, max_scaleout: int
     return dataclasses.replace(request, cand_valid=cv)
 
 
+class CircuitBreaker:
+    """Dispatch-path circuit breaker: CLOSED -> OPEN after ``threshold``
+    consecutive failed dispatch calls; OPEN serves every request from the
+    fallback policy; after ``probe_after`` blocked calls the breaker
+    HALF-OPENs and lets one probe call through — success closes it,
+    failure re-opens (counting another trip)."""
+
+    CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
+
+    def __init__(self, threshold: int = 3, probe_after: int = 4):
+        self.threshold = int(threshold)
+        self.probe_after = int(probe_after)
+        self.state = self.CLOSED
+        self.consecutive_failures = 0
+        self.trips = 0
+        self._blocked_calls = 0
+
+    def allow(self) -> bool:
+        """One call per service decide(): may this call dispatch?"""
+        if self.state == self.OPEN:
+            self._blocked_calls += 1
+            if self._blocked_calls >= self.probe_after:
+                self.state = self.HALF_OPEN
+            return False
+        return True                     # closed, or half-open (the probe)
+
+    def record(self, success: bool) -> None:
+        if success:
+            self.consecutive_failures = 0
+            self.state = self.CLOSED
+            return
+        self.consecutive_failures += 1
+        if self.state == self.HALF_OPEN or \
+                self.consecutive_failures >= self.threshold:
+            self.state = self.OPEN
+            self._blocked_calls = 0
+            self.trips += 1
+
+    def snapshot(self) -> Dict:
+        return {"state": self.state,
+                "consecutive_failures": self.consecutive_failures,
+                "trips": self.trips,
+                "blocked_calls": self._blocked_calls}
+
+    def restore(self, st: Dict) -> None:
+        self.state = st["state"]
+        self.consecutive_failures = st["consecutive_failures"]
+        self.trips = st["trips"]
+        self._blocked_calls = st["blocked_calls"]
+
+
 class DecisionService:
     """Collects concurrent decision requests and dispatches them batched.
 
@@ -161,13 +262,44 @@ class DecisionService:
     overlaps device compute of the current one.  ``double_buffer=False``
     restores the synchronous stack->dispatch->fetch loop (decision parity
     between the two modes is asserted in tests).
+
+    Failure envelope: each group dispatch retries up to ``max_retries``
+    times under capped exponential backoff with seeded jitter, bounded by
+    ``deadline_s`` per decide() call; consecutive decide() calls whose
+    dispatches fail trip the :class:`CircuitBreaker` into fallback-for-all
+    mode.  Rows whose predictions come back non-finite are answered by the
+    :class:`~repro.core.fallback.FallbackPolicy` WITHOUT tripping the
+    breaker (a poisoned tenant model is a per-row condition, not a service
+    outage; its fallback rate is visible in the counters).  ``fault_injector``
+    is the chaos hook: a callable invoked once per dispatch attempt that
+    may raise :class:`DispatchFault`.
     """
 
-    def __init__(self, double_buffer: bool = True):
+    def __init__(self, double_buffer: bool = True, *,
+                 fallback: Optional[FallbackPolicy] = None,
+                 max_retries: int = 2, backoff_base_s: float = 0.02,
+                 backoff_cap_s: float = 0.25,
+                 deadline_s: Optional[float] = None,
+                 breaker_threshold: int = 3, breaker_probe_after: int = 4,
+                 shed_capacity: Optional[int] = None, seed: int = 0):
         self.double_buffer = double_buffer
+        self.fallback = fallback or FallbackPolicy()
+        self.max_retries = int(max_retries)
+        self.backoff_base_s = float(backoff_base_s)
+        self.backoff_cap_s = float(backoff_cap_s)
+        self.deadline_s = deadline_s
+        self.breaker = CircuitBreaker(breaker_threshold, breaker_probe_after)
+        self.shed_capacity = shed_capacity
+        self.fault_injector = None      # chaos hook (see repro.sim.chaos)
+        self._rng = np.random.RandomState(seed ^ 0xbac0ff)  # backoff jitter
         self.decisions = 0          # requests served
         self.dispatches = 0         # jit dispatches issued
         self.batched_away = 0       # dispatches saved vs one-per-request
+        self.fallback_decisions = 0  # requests answered by the policy
+        self.guardrail_trips = 0    # ... of which: non-finite sweep rows
+        self.retries = 0            # dispatch attempts beyond the first
+        self.dispatch_failures = 0  # failed dispatch attempts (incl. retried)
+        self.shed_requests = 0      # requests rejected under overload
         # identity-memoized stacks: params / template-base device arrays /
         # edge lists are object-stable across decision rounds (the scalers'
         # caches re-serve the same ndarrays while values are unchanged), so
@@ -176,6 +308,10 @@ class DecisionService:
         # cannot pin stacked device arrays without limit.
         self._stack_memo: "OrderedDict[tuple, tuple]" = OrderedDict()
         self._stack_memo_slots = 64
+
+    @property
+    def breaker_trips(self) -> int:
+        return self.breaker.trips
 
     def _stack_tree(self, cache_key: tuple, rows, get):
         trees = [get(r) for r in rows]
@@ -196,6 +332,8 @@ class DecisionService:
 
     def _dispatch_group(self, key: tuple, group: List[DecisionRequest]):
         """Stack one bucket group and issue its (async) jit dispatch."""
+        if self.fault_injector is not None:
+            self.fault_injector()       # chaos: may raise DispatchFault
         j_b = _job_bucket(len(group))
         rows = group + [group[-1]] * (j_b - len(group))
         stack = lambda get: jax.tree_util.tree_map(
@@ -224,29 +362,110 @@ class DecisionService:
         self.batched_away += len(group) - 1
         return out
 
+    # ------------------------------------------------------ failure envelope
+    def _fallback_result(self, req: DecisionRequest,
+                         totals_row: Optional[np.ndarray] = None,
+                         shed: bool = False) -> DecisionResult:
+        """Answer one request from the bounded heuristic policy."""
+        totals = None
+        if totals_row is not None:
+            totals = {s: float(totals_row[ci])
+                      for ci, s in enumerate(req.candidate_list)}
+        s, pred = self.fallback.decide(
+            req.candidate_list, totals, req.current_scaleout,
+            req.elapsed, req.target)
+        res = DecisionResult(
+            scaleout=int(s), predicted=pred,
+            totals=self.fallback._finite_totals(req.candidate_list, totals),
+            per_component_dev=None,
+            n_candidates=len(req.candidate_list),
+            n_components=req.n_components)
+        res.fallback = True
+        res.shed = shed
+        self.fallback_decisions += 1
+        if shed:
+            self.shed_requests += 1
+        return res
+
+    def _dispatch_with_retry(self, key: tuple,
+                             group: List[DecisionRequest],
+                             t_start: float, deadline: Optional[float]):
+        """Dispatch one group under the retry/backoff/deadline envelope;
+        returns the jit output or None when the envelope is exhausted."""
+        attempt = 0
+        while True:
+            try:
+                return self._dispatch_group(key, group)
+            except DispatchFault:
+                self.dispatch_failures += 1
+                sleep = min(self.backoff_cap_s,
+                            self.backoff_base_s * (2 ** attempt))
+                sleep *= 0.5 + self._rng.rand()     # seeded jitter
+                if attempt >= self.max_retries or (
+                        deadline is not None and
+                        time.time() - t_start + sleep > deadline):
+                    return None
+                time.sleep(sleep)
+                self.retries += 1
+                attempt += 1
+
+    def _shed(self, requests: Sequence[DecisionRequest],
+              results: List[Optional[DecisionResult]]) -> List[int]:
+        """Admission control: above ``shed_capacity`` pending requests,
+        reject the excess — best-effort requests first, newest first —
+        straight to the fallback policy.  Returns the surviving indices."""
+        live = list(range(len(requests)))
+        if self.shed_capacity is None or len(live) <= self.shed_capacity:
+            return live
+        excess = len(live) - int(self.shed_capacity)
+        order = [i for i in reversed(live) if requests[i].best_effort] + \
+                [i for i in reversed(live) if not requests[i].best_effort]
+        for i in order[:excess]:
+            results[i] = self._fallback_result(requests[i], shed=True)
+        return [i for i in live if results[i] is None]
+
     def decide(self, requests: Sequence[DecisionRequest]
                ) -> List[DecisionResult]:
         t_start = time.time()
-        groups: Dict[tuple, List[int]] = defaultdict(list)
-        for i, r in enumerate(requests):
-            groups[r.bucket_key].append(i)
         results: List[Optional[DecisionResult]] = [None] * len(requests)
+        live = self._shed(requests, results)
+        if live and not self.breaker.allow():       # open: fallback for all
+            for i in live:
+                results[i] = self._fallback_result(requests[i])
+            live = []
+        groups: Dict[tuple, List[int]] = defaultdict(list)
+        for i in live:
+            groups[requests[i].bucket_key].append(i)
+        deadline = self.deadline_s
         staged = []
+        dispatch_ok = True
         for key, idxs in groups.items():
-            out = self._dispatch_group(key, [requests[i] for i in idxs])
+            out = self._dispatch_with_retry(
+                key, [requests[i] for i in idxs], t_start, deadline)
+            if out is None:                         # envelope exhausted
+                dispatch_ok = False
+                for i in idxs:
+                    results[i] = self._fallback_result(requests[i])
+                continue
             if not self.double_buffer:
                 # synchronous mode: fetch before stacking the next bucket
-                out = (jax.device_get(out[:2]), out[2])
+                out = (jax.device_get((out[0], out[1], out[3])), out[2])
             staged.append((idxs, out))
         for idxs, out in staged:
             if self.double_buffer:
-                picked, totals, per = out
-                # ONE host transfer per group: picks + per-candidate totals
-                picked_np, totals_np = jax.device_get((picked, totals))
+                picked, totals, per, ok = out
+                # ONE host transfer per group: picks + totals + ok flags
+                picked_np, totals_np, ok_np = jax.device_get(
+                    (picked, totals, ok))
             else:
-                (picked_np, totals_np), per = out
+                (picked_np, totals_np, ok_np), per = out
             for gi, ri in enumerate(idxs):
                 req = requests[ri]
+                if not bool(ok_np[gi]):     # guardrail: poisoned sweep row
+                    self.guardrail_trips += 1
+                    results[ri] = self._fallback_result(
+                        req, totals_row=totals_np[gi])
+                    continue
                 sl = int(picked_np[gi])
                 tot = {s: float(totals_np[gi, ci])
                        for ci, s in enumerate(req.candidate_list)}
@@ -256,9 +475,44 @@ class DecisionService:
                     per_component_dev=per[gi],
                     n_candidates=len(req.candidate_list),
                     n_components=req.n_components)
+        if groups:
+            self.breaker.record(dispatch_ok)
         self.decisions += len(requests)
         if requests:
             share = (time.time() - t_start) / len(requests)
             for r in results:
                 r.service_seconds = share
         return results
+
+    # --------------------------------------------------- checkpoint support
+    def snapshot_state(self) -> Dict:
+        """Counters + breaker + jitter-RNG state for campaign checkpoints
+        (the stack memo is a pure performance cache and is rebuilt)."""
+        st = {"decisions": self.decisions, "dispatches": self.dispatches,
+              "batched_away": self.batched_away,
+              "fallback_decisions": self.fallback_decisions,
+              "guardrail_trips": self.guardrail_trips,
+              "retries": self.retries,
+              "dispatch_failures": self.dispatch_failures,
+              "shed_requests": self.shed_requests,
+              "breaker": self.breaker.snapshot(),
+              "rng": self._rng.get_state()}
+        if self.fault_injector is not None and \
+                hasattr(self.fault_injector, "snapshot"):
+            st["fault_injector"] = self.fault_injector.snapshot()
+        return st
+
+    def restore_state(self, st: Dict) -> None:
+        self.decisions = st["decisions"]
+        self.dispatches = st["dispatches"]
+        self.batched_away = st["batched_away"]
+        self.fallback_decisions = st["fallback_decisions"]
+        self.guardrail_trips = st["guardrail_trips"]
+        self.retries = st["retries"]
+        self.dispatch_failures = st["dispatch_failures"]
+        self.shed_requests = st["shed_requests"]
+        self.breaker.restore(st["breaker"])
+        self._rng.set_state(st["rng"])
+        if "fault_injector" in st and self.fault_injector is not None and \
+                hasattr(self.fault_injector, "restore"):
+            self.fault_injector.restore(st["fault_injector"])

@@ -77,32 +77,44 @@ def enel_loss(params: Dict, batch: Dict, weights: Optional[jax.Array] = None,
 
 
 def _adam_update(params, opt, batch, lr, weights=None, use_kernel=False):
+    """One guarded Adam step: a step whose loss or gradients come back
+    non-finite is SKIPPED (params/opt unchanged, ``ok=False``) instead of
+    writing NaN into the parameters — one poisoned batch row or a
+    divergent step can no longer destroy the model."""
     (loss, parts), g = jax.value_and_grad(enel_loss, has_aux=True)(
         params, batch, weights, use_kernel)
-    mu, nu, t = opt
-    t = t + 1
-    mu = jax.tree_util.tree_map(lambda m, gg: 0.9 * m + 0.1 * gg, mu, g)
+    ok = jnp.isfinite(loss)
+    for leaf in jax.tree_util.tree_leaves(g):
+        ok = ok & jnp.all(jnp.isfinite(leaf))
+    mu0, nu0, t0 = opt
+    t = t0 + 1
+    mu = jax.tree_util.tree_map(lambda m, gg: 0.9 * m + 0.1 * gg, mu0, g)
     nu = jax.tree_util.tree_map(lambda v, gg: 0.999 * v + 0.001 * gg * gg,
-                                nu, g)
+                                nu0, g)
 
     def upd(p, m, v):
         mh = m / (1 - 0.9 ** t)
         vh = v / (1 - 0.999 ** t)
         return p - lr * mh / (jnp.sqrt(vh) + 1e-8)
 
-    return jax.tree_util.tree_map(upd, params, mu, nu), (mu, nu, t), loss
+    new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+    sel = lambda a, b: jax.tree_util.tree_map(
+        lambda x, y: jnp.where(ok, x, y), a, b)
+    return sel(new_params, params), \
+        (sel(mu, mu0), sel(nu, nu0), jnp.where(ok, t, t0)), loss, ok
 
 
 def _adam_run_impl(params, opt, batch, steps, lr, use_kernel=False):
-    """`steps` Adam updates fused into one jit (dispatch-bound otherwise)."""
+    """`steps` Adam updates fused into one jit (dispatch-bound otherwise);
+    also returns how many steps the non-finite guard skipped."""
     def body(carry, _):
         p, o = carry
-        p, o, loss = _adam_update(p, o, batch, lr, None, use_kernel)
-        return (p, o), loss
+        p, o, loss, ok = _adam_update(p, o, batch, lr, None, use_kernel)
+        return (p, o), (loss, ok)
 
-    (params, opt), losses = jax.lax.scan(body, (params, opt), None,
-                                         length=steps)
-    return params, opt, losses[-1]
+    (params, opt), (losses, oks) = jax.lax.scan(body, (params, opt), None,
+                                                length=steps)
+    return params, opt, losses[-1], steps - jnp.sum(oks)
 
 
 _adam_run = jax.jit(_adam_run_impl, static_argnums=(3, 5))
@@ -133,12 +145,12 @@ def _adam_run_resident_impl(params, opt, batch, weights, key, lr, dropout_p,
         drop = (jax.random.uniform(sub, batch["metrics_valid"].shape)
                 < dropout_p) & ~batch["is_summary"]
         b = dict(batch, metrics_valid=batch["metrics_valid"] & ~drop)
-        p, o, loss = _adam_update(p, o, b, lr, weights, use_kernel)
-        return (p, o, k), loss
+        p, o, loss, ok = _adam_update(p, o, b, lr, weights, use_kernel)
+        return (p, o, k), (loss, ok)
 
-    (params, opt, _), losses = jax.lax.scan(body, (params, opt, key), None,
-                                            length=steps)
-    return params, opt, losses[-1]
+    (params, opt, _), (losses, oks) = jax.lax.scan(body, (params, opt, key),
+                                                   None, length=steps)
+    return params, opt, losses[-1], steps - jnp.sum(oks)
 
 
 _adam_run_resident = jax.jit(_adam_run_resident_impl, static_argnums=(7, 8))
@@ -178,6 +190,12 @@ class EnelTrainer:
         self.cache: Optional[TrainingCache] = None
         self.cache_capacity = cache_capacity
         self._fit_calls = 0
+        # non-finite guard telemetry (see _adam_update): steps skipped by
+        # the in-scan guard, and fits where EVERY step was skipped (the
+        # cache-quarantine + retry path)
+        self.nonfinite_steps = 0
+        self.last_skipped_steps = 0
+        self.poisoned_fits = 0
 
     def _reset_opt(self):
         zeros = jax.tree_util.tree_map(jnp.zeros_like, self.params)
@@ -219,11 +237,23 @@ class EnelTrainer:
                        for k in stacked}
         batch = {k: jnp.asarray(v) for k, v in stacked.items()}
         steps = _round_steps(steps)
-        self.params, self.opt, loss = _adam_run_fn()(
+        self.params, self.opt, loss, skipped = _adam_run_fn()(
             self.params, self.opt, batch, steps, self.lr,
             enel_model.graph_prop_kernel_enabled())
+        self._note_skipped(skipped, steps)
         self.last_fit_seconds = time.time() - t0
         return float(loss)
+
+    def _note_skipped(self, skipped, steps: int) -> None:
+        self.last_skipped_steps = int(skipped)
+        self.nonfinite_steps += self.last_skipped_steps
+        if self.last_skipped_steps >= steps:
+            self.poisoned_fits += 1
+
+    def params_finite(self) -> bool:
+        """True iff every model parameter is finite (one host fetch)."""
+        return all(bool(np.isfinite(np.asarray(l)).all())
+                   for l in jax.tree_util.tree_leaves(self.params))
 
     # ------------------------------------------------- resident fast path
     def extend_history(self, graphs: Sequence[ComponentGraph]) -> None:
@@ -238,7 +268,8 @@ class EnelTrainer:
 
     def fit_resident(self, *, steps: int = 200, from_scratch: bool = False,
                      metric_dropout: float = 0.5,
-                     latest_only: bool = False) -> float:
+                     latest_only: bool = False,
+                     _retry: bool = True) -> float:
         """Train on the resident ring buffer; returns final loss.
 
         ``latest_only`` restricts the loss to the newest ``extend_history``
@@ -246,6 +277,12 @@ class EnelTrainer:
         otherwise the whole ring (scratch-retrain window) trains with
         per-slot weights masking unfilled slots.  Metric dropout is sampled
         on-device per Adam step (see ``_adam_run_resident_impl``).
+
+        The non-finite guard skips poisoned steps instead of writing NaN
+        params (counted in ``nonfinite_steps``); a fit where EVERY step was
+        skipped triggers one cache :meth:`~repro.core.graph.TrainingCache.
+        quarantine_nonfinite` sweep and a single retry — self-healing after
+        in-place cache corruption.
         """
         if self.cache is None or self.cache.count == 0:
             return float("nan")
@@ -259,10 +296,20 @@ class EnelTrainer:
                                  self._fit_calls)
         self._fit_calls += 1
         use_kernel = enel_model.graph_prop_kernel_enabled()
-        self.params, self.opt, loss = _adam_run_resident_fn()(
+        n_steps = _round_steps(steps)
+        self.params, self.opt, loss, skipped = _adam_run_resident_fn()(
             self.params, self.opt, batch, jnp.asarray(weights), key, self.lr,
-            float(metric_dropout), _round_steps(steps), use_kernel)
+            float(metric_dropout), n_steps, use_kernel)
+        self._note_skipped(skipped, n_steps)
         self.last_fit_seconds = time.time() - t0
+        if self.last_skipped_steps >= n_steps and _retry and \
+                self.params_finite() and \
+                self.cache.quarantine_nonfinite() > 0:
+            # params were fine but the batch was poisoned: the corrupt rows
+            # are quarantined now, so one retry trains on the healed ring
+            return self.fit_resident(steps=steps, from_scratch=from_scratch,
+                                     metric_dropout=metric_dropout,
+                                     latest_only=latest_only, _retry=False)
         return float(loss)
 
     def observe_run_resident(self, *, retrain_every: int = 5,
@@ -288,6 +335,31 @@ class EnelTrainer:
         if scratch:
             return self.fit(history, steps=steps, from_scratch=True)
         return self.fit(latest, steps=fine_tune_steps)
+
+    # --------------------------------------------------- checkpoint support
+    def snapshot_state(self) -> Dict:
+        """Picklable host copy of params/opt/cadence/ring state (campaign
+        checkpoints; see dataflow/fleet.py)."""
+        host = lambda t: jax.tree_util.tree_map(np.asarray, t)
+        return {"params": host(self.params), "opt": host(self.opt),
+                "runs_seen": self.runs_seen, "fit_calls": self._fit_calls,
+                "nonfinite_steps": self.nonfinite_steps,
+                "last_skipped_steps": self.last_skipped_steps,
+                "poisoned_fits": self.poisoned_fits,
+                "cache": None if self.cache is None
+                else self.cache.snapshot()}
+
+    def restore_state(self, st: Dict) -> None:
+        dev = lambda t: jax.tree_util.tree_map(jnp.asarray, t)
+        self.params = dev(st["params"])
+        self.opt = dev(st["opt"])
+        self.runs_seen = int(st["runs_seen"])
+        self._fit_calls = int(st["fit_calls"])
+        self.nonfinite_steps = int(st["nonfinite_steps"])
+        self.last_skipped_steps = int(st["last_skipped_steps"])
+        self.poisoned_fits = int(st["poisoned_fits"])
+        self.cache = None if st["cache"] is None \
+            else TrainingCache.from_snapshot(st["cache"])
 
     def predict(self, graphs: Sequence[ComponentGraph]) -> np.ndarray:
         """Per-component total-runtime predictions (seconds)."""

@@ -23,7 +23,9 @@ decision ``alloc_i + free // n_pending``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import copy
+import pickle
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -43,6 +45,50 @@ class CapacityTrace:
     pool_size: int
     capped_decisions: int = 0
     arrivals: int = 0
+
+
+@dataclass
+class CampaignCheckpoint:
+    """Resumable snapshot of a fleet campaign between lockstep rounds.
+
+    Mid-run generators cannot be pickled or rebuilt directly, so a
+    checkpoint stores checkpoint-by-replay state instead: each running
+    experiment's RUN-START snapshot plus the ordered log of results its
+    generator consumed since (one per round).  Resuming restores the
+    run-start state, re-creates the generator and replays the logged
+    results — every host-side mutation the generator performs
+    (``record_component``/``observe_component``, graph building) is
+    deterministically re-applied, the sim backend is then overwritten
+    with its checkpoint-time slot state (``backend_now``), and the
+    generator is parked at exactly the request it was pending on.
+    Experiments whose run already finished (and between-runs
+    checkpoints) store their CURRENT state — no replay needed.
+    """
+    kind: str                              # "adaptive" | "arrival"
+    method: str
+    inject_failures: bool
+    n_runs: int
+    run_idx: int                           # completed runs so far
+    round_idx: int                         # global lockstep round counter
+    checkpoint_every: int
+    mid_run: bool
+    # per experiment: {state, log, backend_now, stats}; log is None when
+    # the state is current (finished / between runs) and a replay list
+    # (run-start state + consumed results) when the run is in flight
+    exps: List[Dict] = field(default_factory=list)
+    all_stats: List[List[RunStats]] = field(default_factory=list)
+    service_state: Dict = field(default_factory=dict)
+    extra: Optional[Dict] = None           # arrival-campaign pool state
+
+    def save(self, path: str) -> None:
+        """Persist to disk (host arrays only — snapshots are numpy)."""
+        with open(path, "wb") as f:
+            pickle.dump(self, f)
+
+    @staticmethod
+    def load(path: str) -> "CampaignCheckpoint":
+        with open(path, "rb") as f:
+            return pickle.load(f)
 
 
 class FleetCampaign:
@@ -90,14 +136,17 @@ class FleetCampaign:
     def _round(self, gens: Dict[int, object], pending: Dict[int, object],
                stats: Dict[int, RunStats],
                caps: Optional[Dict[int, int]] = None,
-               on_decision=None) -> Tuple[Dict[int, object], int, List[int]]:
+               on_decision=None,
+               on_result=None) -> Tuple[Dict[int, object], int, List[int]]:
         """One lockstep round: batch pending sim steps per backend and
         pending decisions per shape bucket, resume every generator.
 
         ``caps`` (job id -> max scale-out) applies capacity caps to the
         listed decision requests; ``on_decision(i, result)`` observes each
-        decision as it lands.  Returns (next pending, capped-decision
-        count, ids of generators that finished this round).
+        decision as it lands; ``on_result(i, result)`` observes EVERY
+        result (sim step or decision) just before it is fed to generator
+        ``i`` — the checkpoint event log.  Returns (next pending,
+        capped-decision count, ids of generators that finished this round).
         """
         results: Dict[int, object] = {}
         sims = {i: r for i, r in pending.items()
@@ -129,6 +178,8 @@ class FleetCampaign:
         nxt: Dict[int, object] = {}
         done: List[int] = []
         for i, res in results.items():
+            if on_result is not None:
+                on_result(i, res)
             try:
                 nxt[i] = gens[i].send(res)
             except StopIteration as stop:
@@ -156,16 +207,195 @@ class FleetCampaign:
         experiment resumes with its own result.  Returns the
         per-experiment RunStats in order.
         """
-        gens = {i: exp.adaptive_run_gen(method, inject_failures)
-                for i, exp in enumerate(self.experiments)}
-        stats = self._drain(gens)
-        return [stats[i] for i in range(len(self.experiments))]
+        stats, _ = self.adaptive_campaign(1, method, inject_failures)
+        return stats[0]
+
+    # ------------------------------------------------------ checkpointed runs
+    def adaptive_campaign(self, n_runs: int, method: str = "enel",
+                          inject_failures: bool = False, *,
+                          checkpoint_every: int = 0,
+                          stop_after_round: Optional[int] = None
+                          ) -> Tuple[Optional[List[List[RunStats]]],
+                                     List[CampaignCheckpoint]]:
+        """``n_runs`` adaptive runs of every experiment with optional
+        periodic checkpoints.
+
+        ``checkpoint_every=k`` snapshots the whole campaign every k
+        lockstep rounds (plus one initial checkpoint), cheap enough to
+        leave off (0) on the hot path — no snapshot or event-log work
+        happens then.  ``stop_after_round=r`` simulates a controller
+        crash: the campaign halts after global round r WITHOUT writing a
+        checkpoint and returns ``(None, ckpts)`` — resume from the last
+        periodic checkpoint with :meth:`resume_adaptive_campaign`.
+
+        Returns ``(stats, ckpts)`` where ``stats[run][i]`` is experiment
+        i's RunStats for that run (or None if stopped early).
+        """
+        return self._campaign_loop(
+            n_runs, method, inject_failures, checkpoint_every,
+            stop_after_round, run_idx=0, round_idx=0, all_stats=[],
+            ckpts=[])
+
+    def _campaign_loop(self, n_runs, method, inject_failures,
+                       checkpoint_every, stop_after_round, *, run_idx,
+                       round_idx, all_stats, ckpts, gens=None, pending=None,
+                       stats=None, runstart=None, logs=None):
+        checkpointing = checkpoint_every > 0
+        mid = gens is not None
+        while run_idx < n_runs or mid:
+            if not mid:
+                stats = {}
+                if checkpointing:
+                    runstart = {i: exp.snapshot_state()
+                                for i, exp in enumerate(self.experiments)}
+                    logs = {i: [] for i in range(len(self.experiments))}
+                gens = {i: exp.adaptive_run_gen(method, inject_failures)
+                        for i, exp in enumerate(self.experiments)}
+                pending = self._start(gens, stats)
+                if checkpointing and not ckpts:
+                    # initial checkpoint: a crash before the first periodic
+                    # one must still be recoverable
+                    ckpts.append(self._make_checkpoint(
+                        method, inject_failures, n_runs, run_idx, round_idx,
+                        checkpoint_every, all_stats, stats, runstart, logs,
+                        pending))
+            mid = False
+            while pending:
+                on_result = None
+                if checkpointing:
+                    on_result = lambda i, res: logs[i].append(res)
+                pending, _, _ = self._round(gens, pending, stats,
+                                            on_result=on_result)
+                round_idx += 1
+                if checkpointing and round_idx % checkpoint_every == 0:
+                    ckpts.append(self._make_checkpoint(
+                        method, inject_failures, n_runs, run_idx, round_idx,
+                        checkpoint_every, all_stats, stats, runstart, logs,
+                        pending))
+                if stop_after_round is not None and \
+                        round_idx >= stop_after_round:
+                    return None, ckpts           # simulated controller crash
+            all_stats.append([stats[i]
+                              for i in range(len(self.experiments))])
+            run_idx += 1
+        return all_stats, ckpts
+
+    def _make_checkpoint(self, method, inject_failures, n_runs, run_idx,
+                         round_idx, checkpoint_every, all_stats, stats,
+                         runstart, logs, pending, kind="adaptive",
+                         extra=None) -> CampaignCheckpoint:
+        mid = bool(pending)
+        all_c = copy.deepcopy(all_stats)
+        if not mid and stats and len(stats) == len(self.experiments):
+            # the round that tripped the checkpoint completed the run:
+            # fold it in so resume starts cleanly at the next run
+            all_c.append([copy.deepcopy(stats[i])
+                          for i in range(len(self.experiments))])
+            run_idx += 1
+        exps = []
+        for i, exp in enumerate(self.experiments):
+            if mid and i in pending:
+                exps.append({
+                    "state": runstart[i], "log": list(logs[i]),
+                    "backend_now": exp.backend.slot_state(exp.sim_slot),
+                    "stats": None})
+            else:                      # finished this run / between runs
+                exps.append({
+                    "state": exp.snapshot_state(), "log": None,
+                    "backend_now": None,
+                    "stats": copy.deepcopy(stats.get(i)) if mid else None})
+        return CampaignCheckpoint(
+            kind=kind, method=method, inject_failures=inject_failures,
+            n_runs=n_runs, run_idx=run_idx, round_idx=round_idx,
+            checkpoint_every=checkpoint_every, mid_run=mid, exps=exps,
+            all_stats=all_c, service_state=self.service.snapshot_state(),
+            extra=copy.deepcopy(extra))
+
+    def _replay_exp(self, i: int, entry: Dict, method: str,
+                    inject_failures: bool):
+        """Rebuild one mid-run generator from its run-start snapshot by
+        replaying its consumed results, then pin the backend slot to its
+        checkpoint-time state.  Returns (gen, pending request)."""
+        exp = self.experiments[i]
+        exp.restore_state(entry["state"])
+        gen = exp.adaptive_run_gen(method, inject_failures)
+        req = next(gen)
+        for res in entry["log"]:
+            req = gen.send(res)
+        # replay fed logged results without touching the sim — overwrite
+        # with the slot state as of the checkpoint (rng stream, clock,
+        # noise block) so post-resume steps continue the exact sequence
+        exp.backend.restore_slot(exp.sim_slot, entry["backend_now"])
+        return gen, req
+
+    def resume_adaptive_campaign(self, ckpt: CampaignCheckpoint, *,
+                                 stop_after_round: Optional[int] = None
+                                 ) -> Tuple[Optional[List[List[RunStats]]],
+                                            List[CampaignCheckpoint]]:
+        """Continue a campaign from a checkpoint; the completed campaign's
+        stats (and decision traces) match an uninterrupted run exactly."""
+        assert ckpt.kind == "adaptive", "use resume_arrival_campaign"
+        self.service.restore_state(ckpt.service_state)
+        all_stats = copy.deepcopy(ckpt.all_stats)
+        if not ckpt.mid_run:
+            for i, entry in enumerate(ckpt.exps):
+                self.experiments[i].restore_state(entry["state"])
+            return self._campaign_loop(
+                ckpt.n_runs, ckpt.method, ckpt.inject_failures,
+                ckpt.checkpoint_every, stop_after_round,
+                run_idx=ckpt.run_idx, round_idx=ckpt.round_idx,
+                all_stats=all_stats, ckpts=[])
+        stats, gens, pending, runstart, logs = {}, {}, {}, {}, {}
+        for i, entry in enumerate(ckpt.exps):
+            if entry["log"] is None:           # finished before checkpoint
+                self.experiments[i].restore_state(entry["state"])
+                stats[i] = copy.deepcopy(entry["stats"])
+            else:
+                gens[i], pending[i] = self._replay_exp(
+                    i, entry, ckpt.method, ckpt.inject_failures)
+                runstart[i] = entry["state"]
+                logs[i] = list(entry["log"])
+        return self._campaign_loop(
+            ckpt.n_runs, ckpt.method, ckpt.inject_failures,
+            ckpt.checkpoint_every, stop_after_round, run_idx=ckpt.run_idx,
+            round_idx=ckpt.round_idx, all_stats=all_stats, ckpts=[],
+            gens=gens, pending=pending, stats=stats, runstart=runstart,
+            logs=logs)
+
+    def adaptive_campaign_resilient(self, n_runs: int, method: str = "enel",
+                                    inject_failures: bool = False, *,
+                                    crash_rounds: Sequence[int] = (),
+                                    checkpoint_every: int = 1
+                                    ) -> Tuple[List[List[RunStats]], int]:
+        """Run a campaign through a schedule of simulated controller
+        crashes, restoring from the latest checkpoint after each one.
+        Returns ``(stats, n_restores)``; stats match an uninterrupted
+        campaign exactly (the checkpoint/replay contract under test in the
+        chaos suite)."""
+        crash_rounds = sorted(int(r) for r in crash_rounds)
+        k = 0
+        stop = crash_rounds[k] if k < len(crash_rounds) else None
+        stats, ckpts = self.adaptive_campaign(
+            n_runs, method, inject_failures,
+            checkpoint_every=checkpoint_every, stop_after_round=stop)
+        latest = list(ckpts)
+        restores = 0
+        while stats is None:
+            restores += 1
+            k += 1
+            stop = crash_rounds[k] if k < len(crash_rounds) else None
+            stats, ckpts = self.resume_adaptive_campaign(
+                latest[-1], stop_after_round=stop)
+            latest.extend(ckpts)
+        return stats, restores
 
     # ------------------------------------------------------ multi-tenant pool
     def arrival_campaign(self, *, pool_size: int, arrival_rate: float,
                          method: str = "enel", inject_failures: bool = False,
-                         seed: int = 0, max_rounds: int = 64
-                         ) -> Tuple[List[Optional[RunStats]],
+                         seed: int = 0, max_rounds: int = 64,
+                         checkpoint_every: int = 0,
+                         stop_after_round: Optional[int] = None
+                         ) -> Tuple[Optional[List[Optional[RunStats]]],
                                     List[CapacityTrace]]:
         """Poisson arrivals into a bounded executor pool.
 
@@ -175,21 +405,61 @@ class FleetCampaign:
         job, and caps every pending decision at the job's current
         allocation plus its fair share of the free pool.  Jobs run one
         adaptive run each and release their executors on completion.
+
+        ``checkpoint_every=k`` snapshots the campaign (including the pool
+        state — arrival queue, allocations, Poisson RNG, in-flight
+        generators) every k rounds into ``self.checkpoints``;
+        ``stop_after_round`` simulates a controller crash (returns
+        ``(None, trace)``), recoverable via :meth:`resume_arrival_campaign`.
         """
         assert method == "enel", \
             "capacity caps ride the decision-service request path, which " \
             "only Enel uses (Ellis decides inline in the runner)"
         rng = np.random.RandomState(seed)
+        self.checkpoints: List[CampaignCheckpoint] = []
+        return self._arrival_loop(
+            pool_size=pool_size, arrival_rate=arrival_rate, method=method,
+            inject_failures=inject_failures, max_rounds=max_rounds,
+            checkpoint_every=checkpoint_every,
+            stop_after_round=stop_after_round, rng=rng,
+            waiting=list(range(len(self.experiments))), gens={}, pending={},
+            alloc={}, stats_d={}, trace=[], round0=0, runstart={}, logs={})
+
+    def resume_arrival_campaign(self, ckpt: CampaignCheckpoint
+                                ) -> Tuple[Optional[List[Optional[RunStats]]],
+                                           List[CapacityTrace]]:
+        """Continue an arrival campaign from a checkpoint; the completed
+        campaign's stats and capacity trace match an uninterrupted run."""
+        assert ckpt.kind == "arrival", "use resume_adaptive_campaign"
+        self.service.restore_state(ckpt.service_state)
+        ex = copy.deepcopy(ckpt.extra)
+        rng = np.random.RandomState(0)
+        rng.set_state(ex["rng"])
+        gens, pending, runstart, logs = {}, {}, {}, {}
+        for i, entry in enumerate(ckpt.exps):
+            if entry["log"] is None:
+                self.experiments[i].restore_state(entry["state"])
+            else:
+                gens[i], pending[i] = self._replay_exp(
+                    i, entry, ckpt.method, ckpt.inject_failures)
+                runstart[i] = entry["state"]
+                logs[i] = list(entry["log"])
+        self.checkpoints = []
+        return self._arrival_loop(
+            pool_size=ex["pool_size"], arrival_rate=ex["arrival_rate"],
+            method=ckpt.method, inject_failures=ckpt.inject_failures,
+            max_rounds=ex["max_rounds"],
+            checkpoint_every=ckpt.checkpoint_every, stop_after_round=None,
+            rng=rng, waiting=ex["waiting"], gens=gens, pending=pending,
+            alloc=ex["alloc"], stats_d=ex["stats_d"], trace=ex["trace"],
+            round0=ckpt.round_idx, runstart=runstart, logs=logs)
+
+    def _arrival_loop(self, *, pool_size, arrival_rate, method,
+                      inject_failures, max_rounds, checkpoint_every,
+                      stop_after_round, rng, waiting, gens, pending, alloc,
+                      stats_d, trace, round0, runstart, logs):
+        checkpointing = checkpoint_every > 0
         s_min = SCALEOUT_RANGE[0]
-        waiting = list(range(len(self.experiments)))
-        gens: Dict[int, object] = {}
-        pending: Dict[int, object] = {}
-        # granted allocation per active job: updated the moment a pick is
-        # granted (decision result) and re-confirmed by the next sim step,
-        # so admissions never read a stale pool
-        alloc: Dict[int, int] = {}
-        stats_d: Dict[int, RunStats] = {}
-        trace: List[CapacityTrace] = []
 
         def admit(row: CapacityTrace):
             n = int(rng.poisson(arrival_rate)) if arrival_rate > 0 \
@@ -203,6 +473,9 @@ class FleetCampaign:
                 i = waiting.pop(0)
                 exp = self.experiments[i]
                 exp.scale_cap = free          # clamps the initial allocation
+                if checkpointing:             # run-start snapshot for replay
+                    runstart[i] = exp.snapshot_state()
+                    logs[i] = []
                 gens[i] = exp.adaptive_run_gen(method, inject_failures)
                 try:
                     pending[i] = next(gens[i])
@@ -212,7 +485,7 @@ class FleetCampaign:
                 alloc[i] = int(getattr(pending[i], "end_scaleout", s_min))
                 row.arrivals += 1
 
-        for round_idx in range(max_rounds):
+        for round_idx in range(round0, max_rounds):
             row = CapacityTrace(round_idx, 0, 0, pool_size)
             admit(row)
             if not pending and not waiting:
@@ -233,8 +506,12 @@ class FleetCampaign:
                 # always a candidate, so apply_capacity's fallback (which
                 # could exceed a sub-floor cap) cannot trigger here
 
+            on_result = None
+            if checkpointing:
+                on_result = lambda i, res: logs[i].append(res)
             pending, capped, done = self._round(gens, pending, stats_d,
-                                                caps=caps, on_decision=grant)
+                                                caps=caps, on_decision=grant,
+                                                on_result=on_result)
             row.capped_decisions = capped
             for i in done:                    # job done: release executors
                 alloc.pop(i, None)
@@ -243,6 +520,36 @@ class FleetCampaign:
             row.pool_used = sum(alloc.values())
             trace.append(row)
             assert row.pool_used <= pool_size, "capacity model oversubscribed"
+            rounds_done = round_idx + 1
+            if checkpointing and rounds_done % checkpoint_every == 0:
+                extra = {"pool_size": pool_size,
+                         "arrival_rate": arrival_rate,
+                         "max_rounds": max_rounds, "rng": rng.get_state(),
+                         "waiting": list(waiting), "alloc": dict(alloc),
+                         "stats_d": stats_d, "trace": trace}
+                exps = []
+                for i, exp in enumerate(self.experiments):
+                    if i in pending:
+                        exps.append({
+                            "state": runstart[i], "log": list(logs[i]),
+                            "backend_now":
+                                exp.backend.slot_state(exp.sim_slot),
+                            "stats": None})
+                    else:
+                        exps.append({"state": exp.snapshot_state(),
+                                     "log": None, "backend_now": None,
+                                     "stats": None})
+                self.checkpoints.append(CampaignCheckpoint(
+                    kind="arrival", method=method,
+                    inject_failures=inject_failures, n_runs=1, run_idx=0,
+                    round_idx=rounds_done,
+                    checkpoint_every=checkpoint_every,
+                    mid_run=bool(pending), exps=exps, all_stats=[],
+                    service_state=self.service.snapshot_state(),
+                    extra=copy.deepcopy(extra)))
+            if stop_after_round is not None and \
+                    rounds_done >= stop_after_round:
+                return None, trace            # simulated controller crash
         for exp in self.experiments:          # max_rounds may strand actives
             exp.scale_cap = None
         stats = [stats_d.get(i) for i in range(len(self.experiments))]

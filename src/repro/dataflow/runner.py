@@ -27,7 +27,9 @@ cross-context reuse claim (see ``repro.sim.evaluate``).
 """
 from __future__ import annotations
 
+import copy
 import time
+from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -69,6 +71,14 @@ class RunStats:
     cache_transfers: int = 0
     cache_skips: int = 0
     cache_evictions: int = 0
+    # fault-tolerance counters: decisions answered by the model-free
+    # fallback / shed under overload during this run, plus this run's share
+    # of service-wide dispatch retries and breaker trips (deltas over the
+    # run — service-wide under a fleet campaign, see adaptive_run_gen)
+    fallback_decisions: int = 0
+    shed_requests: int = 0
+    retries: int = 0
+    breaker_trips: int = 0
 
     @property
     def cvc(self) -> int:
@@ -191,10 +201,79 @@ class JobExperiment:
         # the 22-component LR/MPC (keeps the campaign tractable on 1 core)
         self.decision_interval = 2 if self.job.n_components > 15 else 1
         self.scale_cap: Optional[int] = None   # multi-tenant capacity cap
+        self.best_effort = False     # shed first under service overload
+        self.chaos = None            # optional per-experiment fault injector
         self.graph_history: List[ComponentGraph] = []
         self.target: Optional[float] = None
         self.stats: List[RunStats] = []
         self._run_idx = 0
+
+    # ----------------------------------------------------------- checkpoint
+    def snapshot_state(self) -> Dict:
+        """Everything a trace-identical resume needs: learned state (model
+        params, optimizer moments, cache rings, observation histories), the
+        sim slot's RNG/clock state and the bookkeeping counters.  Perf-only
+        caches (sweep templates, probe masks, memoized stacks) are skipped —
+        they repopulate deterministically.  Graph/summary lists hold
+        append-only immutable records, so shallow list copies suffice."""
+        return {
+            "run_idx": int(self._run_idx),
+            "target": self.target,
+            "scale_cap": self.scale_cap,
+            "best_effort": bool(self.best_effort),
+            "stats": copy.deepcopy(self.stats),
+            "graph_history": list(self.graph_history),
+            # node_context consumes the encoder's rng per call (the random
+            # version-dropout of the v-group), so replay must re-draw the
+            # same stream
+            "encoder_rng": self.encoder.rng.get_state(),
+            "trainer": self.trainer.snapshot_state(),
+            "enel": {
+                "hist_summaries": {k: list(v) for k, v in
+                                   self.enel.hist_summaries.items()},
+                "first_component_history":
+                    list(self.enel.first_component_history),
+                "fallback_decisions": int(self.enel.fallback_decisions),
+                # NOT perf-only: a probe-cache MISS makes build_sweep call
+                # the graph builder twice more, consuming encoder rng draws
+                # — the hit/miss pattern must replay exactly (entries are
+                # immutable tuples, a shallow dict copy suffices)
+                "probe_cache": dict(self.enel._probe_cache),
+            },
+            "ellis_history": {k: list(v) for k, v in
+                              self.ellis.history.items()},
+            # fitted models are snapshotted, NOT refit on restore: under
+            # method="enel" they are deliberately stale relative to the
+            # growing history (last fit at profile time), and a refit would
+            # diverge the s0 recommendation from the uninterrupted trace
+            "ellis_models": copy.deepcopy(self.ellis.models),
+            "backend": self.backend.slot_state(self.sim_slot),
+        }
+
+    def restore_state(self, state: Dict) -> None:
+        """Inverse of :meth:`snapshot_state`; the snapshot itself is left
+        pristine (fresh copies are handed out), so one checkpoint can be
+        restored any number of times."""
+        self._run_idx = int(state["run_idx"])
+        self.target = state["target"]
+        self.scale_cap = state["scale_cap"]
+        self.best_effort = bool(state["best_effort"])
+        self.stats = copy.deepcopy(state["stats"])
+        self.graph_history = list(state["graph_history"])
+        self.encoder.rng.set_state(state["encoder_rng"])
+        self.trainer.restore_state(state["trainer"])
+        self.enel.hist_summaries = defaultdict(
+            list, {k: list(v) for k, v in
+                   state["enel"]["hist_summaries"].items()})
+        self.enel.first_component_history = \
+            list(state["enel"]["first_component_history"])
+        self.enel.fallback_decisions = \
+            int(state["enel"]["fallback_decisions"])
+        self.enel._probe_cache = dict(state["enel"]["probe_cache"])
+        self.ellis.history = defaultdict(
+            list, {k: list(v) for k, v in state["ellis_history"].items()})
+        self.ellis.models = copy.deepcopy(state["ellis_models"])
+        self.backend.restore_slot(self.sim_slot, state["backend"])
 
     # ------------------------------------------------------------ execution
     def _execute_gen(self, *, scaler: Optional[str], inject_failures: bool,
@@ -211,6 +290,8 @@ class JobExperiment:
         prev_summary: Optional[NodeAttrs] = None
         decide_s = 0.0
         decide_n = 0
+        fallback_n = 0
+        shed_n = 0
         for k in range(job.n_components):
             step = yield SimStepRequest(
                 slot=self.sim_slot, comp_idx=k, start_scaleout=s_prev,
@@ -255,10 +336,13 @@ class JobExperiment:
                         graph_builder=builder, next_comp=k + 1,
                         n_components=job.n_components, elapsed=clock,
                         current_scaleout=s, target_runtime=self.target,
-                        current_summary=prev_summary)
+                        current_summary=prev_summary,
+                        best_effort=self.best_effort)
                     decide_s += time.time() - t0
                     result = yield req
                     t0 = time.time()
+                    fallback_n += int(result.fallback)
+                    shed_n += int(result.shed)
                     s_new, _, _ = self.enel.apply_decision(req, result)
                     decide_s += result.service_seconds
                 else:
@@ -272,11 +356,12 @@ class JobExperiment:
                     run.rescales.append((k + 1, s, s_new))
                     s = s_new
                     scaleouts.append(s)
-        return run, run_graphs, scaleouts, decide_s, decide_n
+        return run, run_graphs, scaleouts, decide_s, decide_n, fallback_n, \
+            shed_n
 
     def _execute(self, *, scaler: Optional[str], inject_failures: bool,
                  initial_s: int) -> Tuple[RunRecord, List[ComponentGraph],
-                                          List[int], float, int]:
+                                          List[int], float, int, int, int]:
         return drive(self._execute_gen(scaler=scaler,
                                        inject_failures=inject_failures,
                                        initial_s=initial_s), self.service,
@@ -290,7 +375,7 @@ class JobExperiment:
         be scratch-retrained just to learn the new context's target)."""
         for i in range(n_runs):
             s = PROFILING_SCALEOUTS[i % len(PROFILING_SCALEOUTS)]
-            run, graphs, scaleouts, _, _ = self._execute(
+            run, graphs, scaleouts, _, _, _, _ = self._execute(
                 scaler=None, inject_failures=False, initial_s=s)
             self.graph_history.extend(graphs)
             self.trainer.extend_history(graphs)
@@ -324,6 +409,9 @@ class JobExperiment:
         job = self.job
         cache = self.enel.template_cache
         cache0 = (cache.transfers, cache.skips, cache.evictions)
+        # retry/breaker deltas are service-wide (one envelope serves the
+        # whole fleet); per-run rows report the delta observed over the run
+        svc0 = (self.service.retries, self.service.breaker_trips)
         # fair initial allocation for both methods (paper §V-B.3): Ellis'
         # per-component models pick the cheapest compliant scale-out
         s0, predicted = self.ellis.recommend(
@@ -331,9 +419,13 @@ class JobExperiment:
             current_scaleout=SCALEOUT_RANGE[0], target_runtime=self.target)
         if self.scale_cap is not None:      # multi-tenant admission headroom
             s0 = max(SCALEOUT_RANGE[0], min(s0, int(self.scale_cap)))
-        run, graphs, scaleouts, decide_s, decide_n = yield from \
-            self._execute_gen(scaler=method,
-                              inject_failures=inject_failures, initial_s=s0)
+        run, graphs, scaleouts, decide_s, decide_n, fallback_n, shed_n = \
+            yield from self._execute_gen(
+                scaler=method, inject_failures=inject_failures, initial_s=s0)
+        if self.chaos is not None:
+            # controller-side fault injection: poisoned observations enter
+            # the pipeline HERE, upstream of the cache quarantine guardrail
+            graphs = self.chaos.poison_graphs(graphs, self._run_idx)
         self.graph_history.extend(graphs)
         # keep the resident ring in sync for BOTH methods so a later Enel
         # scratch retrain sees the full history window
@@ -347,6 +439,8 @@ class JobExperiment:
             self.trainer.observe_run_resident(
                 retrain_every=5, steps=160, fine_tune_steps=60)
             fit_s = time.time() - t0
+            if self.chaos is not None:
+                self.chaos.after_fit(self.trainer, self._run_idx)
         else:
             self.ellis.refit()
         st = RunStats(self._run_idx, method, run.runtime, self.target,
@@ -357,7 +451,10 @@ class JobExperiment:
                       decide_calls=decide_n,
                       cache_transfers=cache.transfers - cache0[0],
                       cache_skips=cache.skips - cache0[1],
-                      cache_evictions=cache.evictions - cache0[2])
+                      cache_evictions=cache.evictions - cache0[2],
+                      fallback_decisions=fallback_n, shed_requests=shed_n,
+                      retries=self.service.retries - svc0[0],
+                      breaker_trips=self.service.breaker_trips - svc0[1])
         self.stats.append(st)
         return st
 

@@ -248,6 +248,13 @@ class NumpySimBackend:
     def begin_run(self, slot: int) -> None:
         self._slots[slot][0].begin_run()
 
+    def slot_state(self, slot: int) -> dict:
+        """Mutable state of one registered sim, for campaign checkpoints."""
+        return self._slots[slot][0].state_dict()
+
+    def restore_slot(self, slot: int, state: dict) -> None:
+        self._slots[slot][0].load_state_dict(state)
+
     def step(self, requests: Sequence[SimStepRequest]
              ) -> List[SimStepResult]:
         results = []
@@ -368,6 +375,38 @@ class BatchedClusterSim:
             self._dirty.add(slot)
         return s.run_idx
 
+    # ----------------------------------------------------------- checkpoint
+    def slot_state(self, slot: int) -> dict:
+        """Mutable state of one slot, sufficient for a trace-identical
+        resume: host RNG stream, clock/interference carry, stage cursors
+        and the current run's pre-drawn noise block."""
+        s = self._slots[slot]
+        return {
+            "rng": s.rng.get_state(),
+            "clock": F32(s.clock),
+            "interf": F32(s.interf),
+            "run_idx": int(s.run_idx),
+            "runs_started": int(s.runs_started),
+            "cursor": int(s.cursor),
+            "stage_idx": int(s.stage_idx),
+            "noise": s.noise.copy(),
+        }
+
+    def restore_slot(self, slot: int, state: dict) -> None:
+        s = self._slots[slot]
+        s.rng.set_state(state["rng"])
+        s.clock = F32(state["clock"])
+        s.interf = F32(state["interf"])
+        s.run_idx = int(state["run_idx"])
+        s.runs_started = int(state["runs_started"])
+        s.cursor = int(state["cursor"])
+        s.stage_idx = int(state["stage_idx"])
+        s.noise = state["noise"].copy()
+        # invalidate the device-resident caches derived from slot state
+        self._kill_dev = None
+        if self._built:
+            self._dirty.add(slot)
+
     def _kill_rows(self):
         if self._kill_dev is None:
             self._kill_dev = jnp.asarray(np.stack(
@@ -377,7 +416,12 @@ class BatchedClusterSim:
 
     def _strag_slice(self, slot: int, n: int) -> np.ndarray:
         s = self._slots[slot]
-        idx = (s.stage_idx + np.arange(n)) % T_STRAGGLER
+        # the run block holds the WHOLE run's stages, so the straggler
+        # stream must be aligned to the run's first stage: normally the
+        # pack happens right after begin_run (cursor 0), but a mid-run
+        # checkpoint restore re-packs with the cursor already advanced
+        base = s.stage_idx - s.cursor
+        idx = (base + np.arange(n)) % T_STRAGGLER
         return s.win["straggler"][idx]
 
     def _run_block(self):

@@ -26,6 +26,8 @@ import numpy as np
 
 from repro.dataflow.fleet import FleetCampaign
 from repro.dataflow.runner import JobExperiment, RunStats
+from repro.dataflow.workloads import SCALEOUT_RANGE
+from repro.sim.chaos import make_dispatch_chaos, make_injector
 from repro.sim.engine import BatchedClusterSim
 from repro.sim.scenarios import make_scenario
 
@@ -33,6 +35,8 @@ DEFAULT_JOBS = ("lr", "mpc", "kmeans", "gbt")
 DEFAULT_SCENARIOS = ("baseline", "node_failure", "stragglers",
                      "spot_preemption", "interference_burst",
                      "data_skew_drift")
+CHAOS_SCENARIOS = ("chaos_observations", "chaos_model", "chaos_timeouts",
+                   "chaos_crashes")
 # (train_scenario, train_size) -> (deploy_scenario, deploy_size) per job
 DEFAULT_TRANSFER_CELLS = (
     ("baseline", 1.0, "node_failure", 1.0, "kmeans"),
@@ -107,6 +111,125 @@ def run_scenario_campaign(scenario_name: str,
                  "decisions": decisions,
                  "decisions_per_s": decisions / max(wall, 1e-9), **extra})
     return rows
+
+
+def _robustness_cols(stats: Sequence[RunStats]) -> Dict:
+    """Fault-handling aggregates over one experiment's adaptive runs."""
+    sel = [s for s in stats if s is not None and s.kind != "profiling"]
+    decisions = sum(s.decide_calls for s in sel)
+    bad = 0
+    for s in sel:
+        for z in (s.scaleouts or ()):
+            zf = float(z)
+            ok = np.isfinite(zf) and \
+                SCALEOUT_RANGE[0] <= zf <= SCALEOUT_RANGE[1]
+            bad += not ok
+    fb = sum(s.fallback_decisions for s in sel)
+    return {"decisions": decisions,
+            "fallback_decisions": fb,
+            "fallback_rate": fb / max(decisions, 1),
+            "retries": sum(s.retries for s in sel),
+            "breaker_trips": sum(s.breaker_trips for s in sel),
+            "shed_requests": sum(s.shed_requests for s in sel),
+            "nonfinite_decisions": int(bad)}
+
+
+def run_chaos_campaign(scenario_name: str,
+                       job_keys: Sequence[str] = DEFAULT_JOBS, *,
+                       engine: str = "batched", seed: int = 0,
+                       profile_runs: int = 3, adaptive_runs: int = 6,
+                       candidate_stride: int = 2) -> List[Dict]:
+    """One controller-chaos scenario over a job fleet: profile cleanly,
+    then run the adaptive campaign with the scenario's fault plan attached
+    to the control plane (observation poisoning + cache corruption + model
+    poisoning per experiment, dispatch timeouts at the service, controller
+    crashes recovered from checkpoints).  Returns one row per job plus a
+    fleet summary row with injected-fault and recovery counters."""
+    sc = make_scenario(scenario_name, seed=seed)
+    spec = sc.chaos
+    shared = BatchedClusterSim() if engine == "batched" else None
+    exps = [JobExperiment(k, seed=seed + i, scenario=sc,
+                          candidate_stride=candidate_stride, engine=engine,
+                          backend=shared)
+            for i, k in enumerate(job_keys)]
+    campaign = FleetCampaign(exps)
+    campaign.profile(profile_runs)
+    # faults start AFTER profiling: the control plane degrades mid-flight,
+    # it does not start broken
+    for exp in exps:
+        exp.chaos = make_injector(spec, exp.seed)
+    campaign.service.fault_injector = make_dispatch_chaos(spec)
+    t0 = time.time()
+    restores = 0
+    if spec.crash_rounds:
+        all_stats, restores = campaign.adaptive_campaign_resilient(
+            adaptive_runs, "enel", sc.inject_failures,
+            crash_rounds=spec.crash_rounds, checkpoint_every=1)
+    else:
+        all_stats, _ = campaign.adaptive_campaign(
+            adaptive_runs, "enel", sc.inject_failures)
+    wall = time.time() - t0
+    per_exp = [[run[i] for run in all_stats] for i in range(len(exps))]
+    rows = []
+    for exp, acc in zip(exps, per_exp):
+        row = {"scenario": scenario_name, "chaos": spec.name,
+               "job": exp.job_key, "engine": engine, "seed": seed}
+        row.update(_adaptive_rows(acc))
+        row.update(_robustness_cols(acc))
+        if exp.chaos is not None:
+            row.update(exp.chaos.snapshot())
+        rows.append(row)
+    svc = campaign.service
+    fleet = {"scenario": scenario_name, "chaos": spec.name,
+             "job": "__fleet__", "engine": engine, "seed": seed,
+             "fleet_size": len(exps), "wall_s_adaptive": wall,
+             "restores": restores,
+             "svc_fallback_decisions": svc.fallback_decisions,
+             "svc_guardrail_trips": svc.guardrail_trips,
+             "svc_retries": svc.retries,
+             "svc_dispatch_failures": svc.dispatch_failures,
+             "svc_breaker_trips": svc.breaker_trips,
+             "quarantined_rows": sum(
+                 exp.trainer.cache.quarantined for exp in exps
+                 if exp.trainer.cache is not None),
+             "poisoned_fits": sum(exp.trainer.poisoned_fits
+                                  for exp in exps)}
+    if svc.fault_injector is not None:
+        fleet["injected_timeouts"] = svc.fault_injector.timeouts
+    rows.append(fleet)
+    return rows
+
+
+def chaos_trace_identity(job_keys: Sequence[str] = ("kmeans", "gbt"), *,
+                         seed: int = 0, adaptive_runs: int = 4,
+                         crash_rounds: Sequence[int] = (2, 5)) -> bool:
+    """Acceptance check: a campaign killed at ``crash_rounds`` and restored
+    from checkpoints must reproduce the uninterrupted campaign's decision
+    trace exactly — WITH chaos active (model poisoning), since injectors
+    are deterministic and checkpointed."""
+    def build():
+        sc = make_scenario("chaos_model", seed=seed)
+        exps = [JobExperiment(k, seed=seed + 7 + i, scenario=sc,
+                              candidate_stride=4, engine="batched")
+                for i, k in enumerate(job_keys)]
+        c = FleetCampaign(exps, engine="batched")
+        c.profile(3)
+        for exp in exps:
+            exp.chaos = make_injector(sc.chaos, exp.seed)
+        return c
+
+    def trace(all_stats):
+        return [(round(s.runtime, 4), round(s.violation, 4),
+                 tuple(s.scaleouts), s.n_failures, s.n_rescales,
+                 s.fallback_decisions)
+                for run in all_stats for s in run]
+
+    plain, _ = build().adaptive_campaign(adaptive_runs, "enel", True)
+    crashed, restores = build().adaptive_campaign_resilient(
+        adaptive_runs, "enel", True, crash_rounds=crash_rounds,
+        checkpoint_every=1)
+    return restores == len(tuple(crash_rounds)) and \
+        trace(plain) == trace(crashed)
 
 
 def run_transfer_cell(train_scenario: str, train_size: float,

@@ -23,6 +23,10 @@ Registry (each entry also composes with any other via dataclasses.replace):
 ``multi_tenant``    global executor pool + Poisson job arrivals (campaign
                     level: concurrent jobs contend, decisions are
                     capacity-capped — see FleetCampaign.arrival_campaign)
+``chaos_*``         controller-side fault plans (repro.sim.chaos): poisoned
+                    observations / cache bit-rot / NaN model params /
+                    dispatch timeouts / controller crashes — attack the
+                    CONTROL PLANE instead of the simulated cluster
 =================== ========================================================
 """
 from __future__ import annotations
@@ -32,6 +36,7 @@ from dataclasses import dataclass
 from typing import Dict
 
 from repro.sim import tables as T
+from repro.sim.chaos import CHAOS_NONE, ChaosSpec
 
 
 @dataclass(frozen=True)
@@ -49,6 +54,7 @@ class Scenario:
     skew_growth: float = 1.0           # per-component parallel-work growth
     arrival_rate: float = 0.0          # jobs/round (multi-tenant campaigns)
     pool_size: int = 0                 # global executor pool (0 = unlimited)
+    chaos: ChaosSpec = CHAOS_NONE      # controller-side fault plan
 
     def key(self):
         """Hashable identity used for table caching."""
@@ -72,6 +78,21 @@ _REGISTRY: Dict[str, Scenario] = {
     "data_skew_drift": Scenario(name="data_skew_drift", skew_growth=1.04),
     "multi_tenant": Scenario(name="multi_tenant", arrival_rate=1.5,
                              pool_size=96),
+    # controller-side chaos plans: the cluster stays on the node_failure
+    # environment while faults hit the control plane itself
+    "chaos_observations": Scenario(
+        name="chaos_observations", inject_failures=True,
+        chaos=ChaosSpec(name="observations", nan_graphs_every=2,
+                        cache_corrupt_every=3)),
+    "chaos_model": Scenario(
+        name="chaos_model", inject_failures=True,
+        chaos=ChaosSpec(name="model", nan_fit_every=3)),
+    "chaos_timeouts": Scenario(
+        name="chaos_timeouts", inject_failures=True,
+        chaos=ChaosSpec(name="timeouts", timeout_every=3, timeout_burst=4)),
+    "chaos_crashes": Scenario(
+        name="chaos_crashes", inject_failures=True,
+        chaos=ChaosSpec(name="crashes", crash_rounds=(2, 5))),
 }
 
 SCENARIO_NAMES = tuple(_REGISTRY)

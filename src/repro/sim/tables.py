@@ -19,11 +19,13 @@ makes the table trick exact rather than an approximation.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import TYPE_CHECKING, Dict, Tuple
 
 import numpy as np
 
-from repro.dataflow.workloads import JobSpec, StageSpec
+if TYPE_CHECKING:              # type-only: keeps ``import repro.sim`` free
+    # of the repro.dataflow package init (which imports repro.sim back)
+    from repro.dataflow.workloads import JobSpec, StageSpec
 
 F32 = np.float32
 EXEC_MAX = 36                 # largest scale-out; tables are (EXEC_MAX+1,)

@@ -245,3 +245,47 @@ def test_template_device_cache_skips_unchanged_uploads():
     assert sc.template_cache.transfers == first_transfers
     assert sc.template_cache.skips >= 10
     assert (s1, t1) == (s2, t2) and totals1 == totals2
+
+
+# ----------------------------------------------------- non-finite fit guard
+def test_nonfinite_guard_skips_poisoned_legacy_fit():
+    """Legacy fit() on a batch with a NaN runtime target: every Adam step's
+    loss is non-finite, the in-scan guard skips them all, and the params
+    stay exactly the (finite) pre-fit values."""
+    bad = _chain_graph(0, seed=0)
+    bad.runtime[bad.runtime_valid] = np.nan
+    tr = EnelTrainer(seed=3)
+    before = jax.tree_util.tree_map(np.asarray, tr.params)
+    loss = tr.fit([bad], steps=8, metric_dropout=0.0)
+    assert not np.isfinite(loss)
+    assert tr.last_skipped_steps == 8
+    assert tr.nonfinite_steps == 8
+    assert tr.poisoned_fits == 1
+    _tree_allclose(tr.params, before, atol=0, rtol=0)
+    assert tr.params_finite()
+
+
+def test_fit_resident_quarantine_retry_heals_in_place_corruption():
+    """NaN written straight into resident ring rows (past the entry
+    quarantine): the first fit skips every step, sweeps the ring, and the
+    automatic retry trains to a finite loss on the healed buffers."""
+    tr = EnelTrainer(seed=4, cache_capacity=8)
+    tr.extend_history([_chain_graph(k, seed=k) for k in range(4)])
+    tr.cache.buffers["metrics"] = \
+        tr.cache.buffers["metrics"].at[1].set(jnp.nan)
+    q0 = tr.cache.quarantined
+    loss = tr.fit_resident(steps=8, from_scratch=True, metric_dropout=0.0)
+    assert np.isfinite(loss)
+    assert tr.cache.quarantined == q0 + 1
+    assert not tr.cache.slot_ok[1]
+    assert tr.params_finite()
+    # without the retry the poisoned fit reports non-finite and skips all
+    tr2 = EnelTrainer(seed=4, cache_capacity=8)
+    tr2.extend_history([_chain_graph(k, seed=k) for k in range(4)])
+    tr2.cache.buffers["metrics"] = \
+        tr2.cache.buffers["metrics"].at[1].set(jnp.nan)
+    loss2 = tr2.fit_resident(steps=8, from_scratch=True,
+                             metric_dropout=0.0, _retry=False)
+    assert not np.isfinite(loss2)
+    assert tr2.last_skipped_steps == 8
+    assert tr2.params_finite()
