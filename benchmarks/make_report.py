@@ -122,6 +122,56 @@ def fig5() -> str:
         return f"(fig5 failed: {e})"
 
 
+def fleet_bench_table() -> str:
+    """Render the ``fleet`` + ``fused`` row families of BENCH_decision.json.
+
+    Schema-tolerant by construction: older JSONs predate the ``fused``
+    section and the 128/1024-size rows, and fused rows themselves predate
+    some columns — every field goes through ``.get`` and missing cells
+    render as an em-dash instead of raising KeyError (the read-side mirror
+    of the merge-don't-clobber convention in ``merge_bench_json``)."""
+    p = ROOT / "BENCH_decision.json"
+    if not p.exists():
+        return "(BENCH_decision.json missing — run benchmarks.fleet_bench)"
+    data = json.loads(p.read_text())
+
+    def fmt(row, key, nd=1, suffix=""):
+        v = row.get(key)
+        if isinstance(v, bool) or not isinstance(v, (int, float)):
+            return "—"
+        return f"{v:.{nd}f}{suffix}"
+
+    fleet = {r.get("fleet_size"): r for r in data.get("fleet", [])
+             if r.get("fleet_size") is not None}
+    fused = {r.get("fleet_size"): r for r in data.get("fused", [])
+             if r.get("fleet_size") is not None}
+    if not fleet and not fused:
+        return "(no fleet/fused rows yet — run benchmarks.fleet_bench)"
+    lines = ["| fleet | batched dec/s | vs sequential | fused dec/s | "
+             "fused steps/s | fused vs live stepped | fused vs jit twin |",
+             "|---|---|---|---|---|---|---|"]
+    for size in sorted(set(fleet) | set(fused)):
+        fl, fu = fleet.get(size, {}), fused.get(size, {})
+        est = " (est)" if fu.get("live_estimated") else ""
+        lines.append(
+            f"| {size} | {fmt(fl, 'batched_dec_per_s')} | "
+            f"{fmt(fl, 'speedup', nd=2, suffix='x')} | "
+            f"{fmt(fu, 'fused_dec_per_s')} | "
+            f"{fmt(fu, 'fused_steps_per_s')} | "
+            f"{fmt(fu, 'speedup_vs_live', suffix='x')}{est} | "
+            f"{fmt(fu, 'speedup_vs_stepped', nd=2, suffix='x')} |")
+    for r in data.get("fused_race", []):
+        lines.append(
+            f"\nScenario race (fleet {r.get('fleet_size', '?')}, "
+            f"{r.get('scenario', '?')}): fused "
+            f"{fmt(r, 'fused_s_median', nd=3)}s vs stepped "
+            f"{fmt(r, 'stepped_s_median', nd=3)}s — "
+            f"{fmt(r, 'speedup_fused', suffix='x')} "
+            f"(plan build {fmt(r, 'plan_build_s', nd=2)}s, host-side, "
+            "once per campaign).")
+    return "\n".join(lines)
+
+
 def perf_log() -> str:
     cells = {
         "olmoe-1b-7b--train_4k": ["-base", "-opt1", "-opt2", "-opt3"],
@@ -161,6 +211,7 @@ MARKERS = {
     "<!-- ROOFLINE-TABLE -->": roofline_table,
     "<!-- ROOFLINE-NOTES -->": roofline_notes,
     "<!-- PERF-LOG -->": perf_log,
+    "<!-- FLEET-BENCH -->": fleet_bench_table,
 }
 
 

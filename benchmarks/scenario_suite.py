@@ -15,6 +15,12 @@ Three measurements, all merged into ``BENCH_decision.json``:
 * ``sim_engine`` — fleet-of-N end-to-end simulation campaign wall time:
   the numpy per-job event loop vs the vectorized engine (per-component
   lockstep steps AND whole-run single dispatches), median-of-k with IQR.
+* ``fused_race`` — the fleet-32 acceptance race for the whole-campaign
+  kernel (``core/campaign_kernel.py``): sim step + decision sweep +
+  resident fit fused into ONE scanned jit vs the stepped python loop over
+  the same jitted body.  Bit-exact traces (tests/test_fused_campaign.py),
+  so the race is pure host-dispatch overhead; plan build (host-side, once
+  per campaign) is timed separately.
 
 ``--ci-smoke`` runs a reduced 2-scenario x 2-job suite plus a small engine
 race under a wall-clock budget (exit 1 on overrun) so CI guards both the
@@ -126,6 +132,72 @@ def measure_engine(fleet_size: int = 32, runs: int = 2, repeats: int = 5,
     return row
 
 
+# ------------------------------------------------------------- fused race
+def measure_fused_race(fleet_size: int = 32, runs: int = 2,
+                       repeats: int = 5, scenario_name: str = "node_failure",
+                       seed: int = 40, profile_runs: int = 3) -> Dict:
+    """Fused whole-campaign scan vs the STEPPED PATH under the disturbance
+    scenario the acceptance gate names.
+
+    ``speedup_fused`` (the gated number) races against the live stepped
+    driver — ``adaptive_campaign`` on a fresh twin fleet per repeat: host
+    python graph building, per-bucket service dispatch and sequential
+    per-job resident fits, i.e. exactly the host round-trips fusion
+    removes.  ``speedup_vs_twin`` is the secondary dispatch-overhead-only
+    number against the python loop over the fused plan's own jitted step
+    body (bit-exact twin).  One seed per job class so the plan dedups to 4
+    structural classes; plan build is reported separately (host-side, once
+    per campaign, amortized over every run it drives)."""
+    import jax
+
+    from repro.core import campaign_kernel as ck
+    from repro.core.service import DecisionService
+    from repro.dataflow import FleetCampaign, JobExperiment
+
+    def fresh_fleet() -> FleetCampaign:
+        exps = [JobExperiment(JOB_CYCLE[i % len(JOB_CYCLE)],
+                              seed=seed + i % len(JOB_CYCLE),
+                              scenario=make_scenario(scenario_name,
+                                                     seed=seed))
+                for i in range(fleet_size)]
+        camp = FleetCampaign(exps, DecisionService(), engine="batched")
+        camp.profile(profile_runs)
+        return camp
+
+    camp = fresh_fleet()
+    t0 = time.time()
+    plan = ck.build_plan(camp.experiments, runs)
+    plan_build_s = time.time() - t0
+    c_f, ys_f = ck.run_fused(plan)            # warmup: compiles the scan
+    jax.block_until_ready(ys_f)
+    _, ys_s = ck.run_stepped(plan)            # warmup: compiles the step
+    jax.block_until_ready(ys_s)
+    fused_t, twin_t = [], []
+    for _ in range(repeats):
+        t0 = time.time()
+        jax.block_until_ready(ck.run_fused(plan)[1])
+        fused_t.append(time.time() - t0)
+        t0 = time.time()
+        jax.block_until_ready(ck.run_stepped(plan)[1])
+        twin_t.append(time.time() - t0)
+    live_t = []
+    for _ in range(min(repeats, 3)):      # fresh fleet per repeat: the
+        twin = fresh_fleet()              # scratch/tune fit cadence then
+        t0 = time.time()                  # matches the fused plan's
+        twin.adaptive_campaign(runs)
+        live_t.append(time.time() - t0)
+    fm, tm, lm = med_iqr(fused_t), med_iqr(twin_t), med_iqr(live_t)
+    return {"fleet_size": fleet_size, "runs_per_campaign": runs,
+            "scenario": scenario_name, "repeats": repeats,
+            "steps": plan.n_steps, "plan_build_s": plan_build_s,
+            "fused_s_median": fm["median"], "fused_s_iqr": fm["iqr"],
+            "stepped_s_median": lm["median"], "stepped_s_iqr": lm["iqr"],
+            "twin_s_median": tm["median"], "twin_s_iqr": tm["iqr"],
+            "speedup_fused": lm["median"] / fm["median"],
+            "speedup_vs_twin": tm["median"] / fm["median"],
+            "nonfinite_decisions": int(np.asarray(c_f["nonfinite"]).sum())}
+
+
 # ----------------------------------------------------------------- driver
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
@@ -140,6 +212,14 @@ def main(argv=None) -> int:
     ap.add_argument("--fleet", type=int, default=32)
     ap.add_argument("--engine-runs", type=int, default=2)
     ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--fused-runs", type=int, default=2)
+    ap.add_argument("--fused-min-speedup", type=float, default=0.0,
+                    help="fail (exit 1) if the fused race speedup over the "
+                         "stepped loop drops below this (acceptance: 3.0 "
+                         "on an idle machine; leave 0 in CI — timings "
+                         "there are noise)")
+    ap.add_argument("--no-fused", dest="fused", action="store_false",
+                    default=True)
     ap.add_argument("--budget-s", type=float, default=0.0,
                     help="fail (exit 1) if total wall time exceeds this")
     ap.add_argument("--ci-smoke", action="store_true",
@@ -199,16 +279,40 @@ def main(argv=None) -> int:
           f"speedup_step={engine_row['speedup_step']:.1f}x,"
           f"speedup_full={engine_row['speedup_full']:.1f}x")
 
-    merge_bench_json(args.out, {"scenarios": scenario_rows,
-                                "scenario_transfer": transfer_rows,
-                                "sim_engine": [engine_row]})
+    ok = True
+    updates = {"scenarios": scenario_rows,
+               "scenario_transfer": transfer_rows,
+               "sim_engine": [engine_row]}
+    if args.fused:
+        fused_row = measure_fused_race(fleet_size=fleet,
+                                       runs=args.fused_runs,
+                                       repeats=max(args.repeats, 5))
+        print(f"fused_race,fleet={fused_row['fleet_size']},"
+              f"fused={fused_row['fused_s_median']*1e3:.0f}ms,"
+              f"stepped={fused_row['stepped_s_median']*1e3:.0f}ms,"
+              f"twin={fused_row['twin_s_median']*1e3:.0f}ms,"
+              f"plan_build={fused_row['plan_build_s']:.1f}s,"
+              f"speedup_fused={fused_row['speedup_fused']:.1f}x,"
+              f"vs_twin={fused_row['speedup_vs_twin']:.2f}x")
+        updates["fused_race"] = [fused_row]
+        if fused_row["nonfinite_decisions"]:
+            print(f"FAIL: fused race produced "
+                  f"{fused_row['nonfinite_decisions']} non-finite decisions")
+            ok = False
+        if (args.fused_min_speedup and
+                fused_row["speedup_fused"] < args.fused_min_speedup):
+            print(f"FAIL: fused speedup {fused_row['speedup_fused']:.1f}x "
+                  f"< required {args.fused_min_speedup:.1f}x")
+            ok = False
+
+    merge_bench_json(args.out, updates)
     wall = time.time() - t_start
     print(f"wrote {os.path.abspath(args.out)} (total {wall:.0f}s)")
     if args.budget_s and wall > args.budget_s:
         print(f"FAIL: scenario suite took {wall:.0f}s "
               f"> budget {args.budget_s:.0f}s")
-        return 1
-    return 0
+        ok = False
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

@@ -106,3 +106,49 @@ class FallbackPolicy:
             if s >= want:
                 return s
         return hi
+
+
+def fallback_pick(candidates, cand_valid, totals, current, elapsed, target,
+                  max_step: int = 4, press_lo: float = 0.5,
+                  press_hi: float = 0.85):
+    """Pure-jnp mirror of :meth:`FallbackPolicy.decide` for in-scan use.
+
+    Returns the picked INDEX into ``candidates`` (an ascending, duplicate-free
+    f32 vector with a ``cand_valid`` mask) instead of the scale-out value —
+    the caller gathers ``candidates[idx]``.  Same contract as the host policy
+    (property-tested against it in ``tests/test_fused_campaign.py``): salvage
+    the smallest compliant candidate among finite totals, else the least
+    (total, scale-out) pair, else the urgency-scaled bounded clamp.  All ops
+    are pure jnp so the whole guardrail runs INSIDE a scanned campaign step.
+    """
+    import jax.numpy as jnp
+
+    candidates = candidates.astype(jnp.float32)
+    inf = jnp.float32(jnp.inf)
+    finite = cand_valid & jnp.isfinite(totals)
+    # salvage: smallest compliant candidate (candidates ascending -> first
+    # feasible index), else first argmin of the finite totals (stable argmin
+    # = smallest scale-out on ties, matching min(key=(total, s)))
+    feasible = finite & (totals <= target)
+    idx_feas = jnp.argmax(feasible)
+    idx_min = jnp.argmin(jnp.where(finite, totals, inf))
+    use_feas = jnp.isfinite(target) & jnp.any(feasible)
+    idx_salvage = jnp.where(use_feas, idx_feas, idx_min)
+    # clamp: urgency-proportional bounded step from the current allocation
+    lo = jnp.min(jnp.where(cand_valid, candidates, inf))
+    hi = jnp.max(jnp.where(cand_valid, candidates, -inf))
+    cur = jnp.where(jnp.isfinite(current), current, lo)
+    cur = jnp.clip(cur, lo, hi)
+    ok_u = (jnp.isfinite(elapsed) & jnp.isfinite(target) & (target > 0)
+            & (elapsed >= 0))
+    urgency = elapsed / target
+    half = max(1, max_step // 2)
+    step = jnp.where(ok_u & (urgency >= press_hi), jnp.float32(max_step),
+                     jnp.where(ok_u & (urgency >= press_lo),
+                               jnp.float32(half), jnp.float32(0.0)))
+    want = jnp.clip(cur + step, lo, hi)
+    ge = cand_valid & (candidates >= want)
+    idx_hi = jnp.argmax(jnp.where(cand_valid, candidates, -inf))
+    idx_clamp = jnp.where(jnp.any(ge), jnp.argmax(ge), idx_hi)
+    return jnp.where(jnp.any(finite), idx_salvage, idx_clamp).astype(
+        jnp.int32)

@@ -432,10 +432,18 @@ def compact_rows(graphs: Sequence[ComponentGraph],
                          for g in graphs]) for k in STACK_KEYS}
 
 
-def _append_stacked_impl(buffers, rows, idx):
+def ring_append(buffers, rows, idx):
+    """Pure ring-buffer scatter: a NEW buffer pytree with ``rows`` written at
+    ``idx`` (functional ``.at[].set``, no host state).  Shared by the jitted
+    :func:`append_stacked` helper AND the fused campaign kernel, where the
+    cache append must be a pure carry update inside ``lax.scan``."""
     import jax
     return jax.tree_util.tree_map(
         lambda b, v: b.at[idx].set(v.astype(b.dtype)), buffers, rows)
+
+
+def _append_stacked_impl(buffers, rows, idx):
+    return ring_append(buffers, rows, idx)
 
 
 def _gather_rows_impl(buffers, idx):

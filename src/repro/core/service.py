@@ -147,6 +147,26 @@ class DecisionResult:
         return self._per_np
 
 
+def sweep_eval_one(p, b, oh, d, ed, es, ev, cd, cv, el, tg, levels):
+    """One job's sweep: assemble + sparse totals + on-device compliant pick.
+
+    Returns (pick index, per-candidate totals, (C, K) per-component
+    predictions, finite-totals ok flag).  Module-level so the fused campaign
+    kernel (``core/campaign_kernel.py``) evaluates decisions with EXACTLY the
+    ops the fleet service dispatches — one numerics contract, two drivers.
+    """
+    c, k = d["a_raw"].shape[:2]
+    flat = assemble_sweep_batch(b, oh, d)
+    tile = lambda a: jnp.broadcast_to(
+        a[None], (c,) + a.shape).reshape((c * k,) + a.shape[1:])
+    per = sweep_sparse_totals(p, flat, tile(ed), tile(es), tile(ev),
+                              levels).reshape(c, k)
+    totals = per.sum(axis=1) + el
+    idx = pick_candidate(cd, cv, totals, tg)
+    ok = sweep_totals_ok(totals, cv)
+    return idx, totals, per, ok
+
+
 def _fleet_impl(params, base, h_onehot, deltas, edge_dst, edge_src,
                 edge_valid, cand, cand_valid, elapsed, target, levels):
     """vmap over the job axis: assemble + sparse sweep + on-device pick.
@@ -159,16 +179,8 @@ def _fleet_impl(params, base, h_onehot, deltas, edge_dst, edge_src,
     record_trace("fleet_sweep")
 
     def one(p, b, oh, d, ed, es, ev, cd, cv, el, tg):
-        c, k = d["a_raw"].shape[:2]
-        flat = assemble_sweep_batch(b, oh, d)
-        tile = lambda a: jnp.broadcast_to(
-            a[None], (c,) + a.shape).reshape((c * k,) + a.shape[1:])
-        per = sweep_sparse_totals(p, flat, tile(ed), tile(es), tile(ev),
-                                  levels).reshape(c, k)
-        totals = per.sum(axis=1) + el
-        idx = pick_candidate(cd, cv, totals, tg)
-        ok = sweep_totals_ok(totals, cv)
-        return idx, totals, per, ok
+        return sweep_eval_one(p, b, oh, d, ed, es, ev, cd, cv, el, tg,
+                              levels)
 
     return jax.vmap(one)(params, base, h_onehot, deltas, edge_dst, edge_src,
                          edge_valid, cand, cand_valid, elapsed, target)

@@ -116,6 +116,34 @@ def _future_nodes(encoder: ContextEncoder, job: JobSpec, comp_idx: int,
     return nodes
 
 
+def frozen_context_tables(encoder: ContextEncoder, job: JobSpec
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+    """Deterministic node-context tables for the fused campaign planner.
+
+    Returns ``(ctx (C, S_max, NS, CTX_DIM) f32, n_stages (C,) int32)`` with
+    NS spanning the whole scale-out grid (``SCALEOUT_RANGE[0]..[1]``): entry
+    ``[c, i, s - lo]`` is component c / stage i's context at scale-out s.
+    Built with ``drop_versions=False`` so NO encoder RNG is consumed — the
+    fused campaign freezes contexts at plan time (documented deviation from
+    the live path's per-observation software-version dropout; ``attempt`` is
+    likewise frozen at 0).  The embed cache makes repeat lookups cheap.
+    """
+    lo, hi = SCALEOUT_RANGE
+    grid = np.arange(lo, hi + 1)
+    n_comp = job.n_components
+    s_max = max(len(job.stages(c)) for c in range(n_comp))
+    ctx = np.zeros((n_comp, s_max, len(grid), 24), np.float32)
+    n_stages = np.zeros(n_comp, np.int32)
+    for c in range(n_comp):
+        specs = job.stages(c)
+        n_stages[c] = len(specs)
+        for i, spec in enumerate(specs):
+            for si, s in enumerate(grid):
+                ctx[c, i, si] = encoder.node_context(
+                    job, spec.name, int(s * 4), drop_versions=False)
+    return ctx, n_stages
+
+
 def _to_graph(nodes: List[NodeAttrs], preds: List[NodeAttrs],
               comp_idx: int) -> ComponentGraph:
     n = len(nodes)

@@ -507,6 +507,50 @@ class BatchedClusterSim:
                              zip(r[_O_WHEN], r[_O_HIT]) if h)
         return ComponentRecord(req.comp_idx, stages), fails
 
+    # ------------------------------------------------------- fused campaign
+    def campaign_run_blocks(self, n_runs: int
+                            ) -> Tuple[np.ndarray, np.ndarray]:
+        """Pre-draw the packed input blocks for ``n_runs`` consecutive fleet
+        runs: ``(blocks (R, T, J, _NF), kill_rows (R, J, W_MAX))``.
+
+        Consumes the slots' RNG streams and advances their run/stage
+        counters exactly as ``n_runs`` stepped (or ``run_full``) runs would,
+        so a fused campaign executed from these blocks sees the SAME noise /
+        straggler / kill draws as the stepped path — and the backend's state
+        afterwards is as if those runs had been started.  The per-step
+        overhead column (``_F_OV``) is left 0: the fused kernel overwrites
+        it from its on-device control row, like the stepped kernel does.
+        """
+        self._build()
+        blocks = np.zeros((n_runs, self._T, self._J, _NF), F32)
+        kills = np.zeros((n_runs, self._J, W_MAX), F32)
+        for r in range(n_runs):
+            for j in range(self._J):
+                self.begin_run(j)
+            for j, s in enumerate(self._slots):
+                tj = s.tables.total_stages
+                blocks[r, :tj, j, _F_NOISE] = s.noise
+                blocks[r, :tj, j, _F_TAB] = self._tabpack[j]
+                blocks[r, :tj, j, _F_CPU0:_F_IO0 + 1] = self._scalpack[j]
+                blocks[r, :tj, j, _F_STRAG] = self._strag_slice(j, tj)
+                blocks[r, tj:, j, _F_STRAG] = 1.0
+                kills[r, j] = s.win["kill_time"][s.run_idx % R_MAX]
+            for s in self._slots:       # advance cursors past the run
+                s.cursor = s.tables.total_stages
+                s.stage_idx += s.tables.total_stages
+        self._kill_dev = None
+        self._dirty.update(range(self._J))
+        return blocks, kills
+
+    def fused_sim_constants(self) -> dict:
+        """The per-fleet constant arrays the stage body closes over — handed
+        to the fused campaign kernel so it scans the SAME ``_make_body``."""
+        self._build()
+        return {"burst": self._burst, "preempt": self._preempt,
+                "iscale2": self._iscale2, "mem_tab": self._mem_tab,
+                "shuf_tab": self._shuf_tab, "t_max": self._T,
+                "s_max": self._S}
+
     # ------------------------------------------------------------- full run
     def run_full(self, a_sched: np.ndarray, z_sched: np.ndarray,
                  inject_failures: bool = False

@@ -1,0 +1,248 @@
+"""Fused whole-campaign kernel: parity, grounding, checkpointing, guardrails.
+
+The contract under test is layered:
+
+* ``run_fused == run_stepped`` BIT-EXACT — the scan and the python loop
+  drive the identical jitted step body, so any divergence is a real bug;
+* the fused sim is grounded in the engine: replaying the fused z-schedule
+  through ``BatchedClusterSim.run_full`` on a twin fleet reproduces the
+  stage runtimes and clocks bit-exactly (same RNG stream contract);
+* a mid-campaign checkpoint/resume materializes identical traces;
+* the in-scan guardrails keep every decision finite under nan_fit chaos;
+* compile count is bounded: a second campaign with the same static plan
+  shape adds ZERO new traces.
+"""
+import numpy as np
+import pytest
+
+import repro.core.campaign_kernel as ck
+from repro.core.model import trace_count
+from repro.core.service import DecisionService
+from repro.dataflow import FleetCampaign, JobExperiment
+from repro.dataflow.fleet import FusedCheckpoint, materialize_fused
+from repro.sim.chaos import ChaosInjector, ChaosSpec
+from repro.sim.scenarios import make_scenario
+
+# three adaptive runs: with PROFILE_RUNS=3 the retrain cadence scratches at
+# run 1 and the nan_fit injector (seed 7, every=2) poisons right after it,
+# so run 2's decisions exercise the in-scan fallback guardrail
+N_RUNS = 3
+PROFILE_RUNS = 3
+
+
+def _campaign(job_keys, seed=7, stride=4, scenarios=None, chaos_on=(),
+              seeds=None):
+    exps = []
+    for i, k in enumerate(job_keys):
+        sc = make_scenario(scenarios[i]) if scenarios else None
+        exps.append(JobExperiment(
+            k, seed=seeds[i] if seeds else seed + i,
+            candidate_stride=stride, scenario=sc))
+    camp = FleetCampaign(exps, DecisionService(seed=3), engine="batched")
+    camp.profile(PROFILE_RUNS)
+    for i in chaos_on:   # attach AFTER profiling, like the chaos suite
+        exps[i].chaos = ChaosInjector(ChaosSpec(name="t", nan_fit_every=2),
+                                      exp_seed=exps[i].seed)
+    return camp
+
+
+def _assert_tree_equal(t1, t2, msg=""):
+    import jax
+    l1 = jax.tree_util.tree_leaves_with_path(t1)
+    l2 = jax.tree_util.tree_leaves_with_path(t2)
+    assert len(l1) == len(l2)
+    for (p, a), (_, b) in zip(l1, l2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{msg}{p}")
+
+
+FIXTURE_JOBS = dict(job_keys=("kmeans", "gbt", "kmeans"), seeds=(7, 8, 7),
+                    scenarios=("node_failure", "baseline", "node_failure"),
+                    chaos_on=(0,))
+
+
+@pytest.fixture(scope="module")
+def fused_pair():
+    """One 3-slot fleet (kmeans repeated with the same seed — exercising
+    class/history dedup) under node_failure + nan_fit chaos, with the
+    fused and stepped drivers run over the SAME plan (module-scoped:
+    compiling the step body once serves every parity assertion below)."""
+    camp = _campaign(**FIXTURE_JOBS)
+    plan = ck.build_plan(camp.experiments, N_RUNS)
+    c_f, ys_f = ck.run_fused(plan)
+    c_s, ys_s = ck.run_stepped(plan)
+    return camp, plan, (c_f, ys_f), (c_s, ys_s)
+
+
+def test_fused_matches_stepped_bitwise(fused_pair):
+    _, _, (c_f, ys_f), (c_s, ys_s) = fused_pair
+    _assert_tree_equal(ys_f, ys_s, "ys:")
+    _assert_tree_equal(c_f, c_s, "carry:")
+
+
+def test_plan_dedups_structural_tables(fused_pair):
+    """Slots 0 and 2 share (job, seed), so they share one class and one
+    history table: the plan carries G=2 < J=3 structural classes."""
+    _, plan, _, _ = fused_pair
+    assert plan.dev["obs_ctx"].shape[0] == 2
+    assert plan.dev["hob_ctx"].shape[0] == 2
+    np.testing.assert_array_equal(np.asarray(plan.dev["cls"]),
+                                  [0, 1, 0])
+
+
+def test_fused_chaos_guardrail(fused_pair):
+    """nan_fit chaos poisons the resident params in-scan; every decision
+    still leaves the scan finite (clamped, counted) and the fallback pick
+    answers at least one decision while the model is poisoned."""
+    _, plan, (c_f, ys_f), _ = fused_pair
+    nonfin = np.asarray(c_f["nonfinite"])
+    assert (nonfin == 0).all(), nonfin
+    assert np.isfinite(np.asarray(ys_f["s_next"])).all()
+    assert np.asarray(c_f["fallbacks"])[0] > 0        # chaos-poisoned job
+    assert np.asarray(plan.dev["poison_at"]).any()    # chaos actually fired
+
+
+def test_fused_grounded_in_run_full(fused_pair):
+    """Replaying the fused a/z schedule through the engine's run_full on a
+    TWIN fleet reproduces stage runtimes and final clocks bit-exactly."""
+    _, plan, (c_f, ys_f), _ = fused_pair
+    twin = _campaign(**FIXTURE_JOBS)
+    backend = twin.experiments[0].backend
+    c_max = plan.static.c_max
+    a = np.asarray(ys_f["a"]).astype(np.int64)        # (T, J)
+    z = np.asarray(ys_f["z"]).astype(np.int64)
+    rt = np.asarray(ys_f["rt"])                       # (T, s_max, J)
+    clock = np.asarray(ys_f["clock"])
+    for r in range(N_RUNS):
+        t0 = r * c_max
+        a_sched = a[t0:t0 + c_max].T.copy()           # (J, c_max)
+        z_sched = z[t0:t0 + c_max].T.copy()
+        res = backend.run_full(a_sched, z_sched)
+        for j, (comps, _) in enumerate(res):
+            exp = twin.experiments[j]
+            for k, comp in enumerate(comps):
+                for i, stage in enumerate(comp.stages):
+                    np.testing.assert_array_equal(
+                        np.float32(stage.runtime), rt[t0 + k, i, j],
+                        err_msg=f"run {r} job {j} comp {k} stage {i}")
+            nc = exp.job.n_components
+            np.testing.assert_array_equal(
+                np.float32(backend.slot_state(j)["clock"]),
+                clock[t0 + nc - 1, j])
+
+
+def test_fused_checkpoint_resume_trace_identical(fused_pair, tmp_path):
+    """A campaign split at every run boundary, checkpointed to disk and
+    resumed, materializes the same traces as the uninterrupted scan."""
+    camp, plan, (c_f, ys_f), _ = fused_pair
+    carry = ck.init_carry(plan)
+    c_max = plan.static.c_max
+    carry, ys1 = ck.run_fused(plan, carry, 0, c_max)
+    import jax
+    host_ys = jax.tree_util.tree_map(np.asarray, ys1)
+    ckpt = FusedCheckpoint(step=c_max, n_steps=plan.n_steps,
+                           carry=ck.carry_to_host(carry), ys=host_ys)
+    p = tmp_path / "fused.ckpt"
+    ckpt.save(str(p))
+    ckpt2 = FusedCheckpoint.load(str(p))
+    carry2 = ck.carry_from_host(ckpt2.carry)
+    carry2, ys2 = ck.run_fused(plan, carry2, ckpt2.step, plan.n_steps)
+    joined = {k: np.concatenate([ckpt2.ys[k], np.asarray(ys2[k])])
+              for k in ckpt2.ys}
+    _assert_tree_equal(joined, ys_f, "resumed ys:")
+    _assert_tree_equal(carry2, c_f, "resumed carry:")
+    stats_resumed = materialize_fused(plan, joined)
+    stats_once = materialize_fused(
+        plan, jax.tree_util.tree_map(np.asarray, ys_f))
+    assert repr(stats_resumed) == repr(stats_once)
+
+
+def test_fused_compile_count_bounded(fused_pair):
+    """Same static plan shape => ZERO new traces (scan + step already
+    compiled); the fused campaign's compile count is bounded by the
+    bucket-ladder rungs, not by runs or jobs."""
+    _, plan, _, _ = fused_pair
+    before = trace_count("fused_campaign")
+    ck.run_fused(plan)
+    ck.run_stepped(plan, stop=1)
+    assert trace_count("fused_campaign") == before
+
+
+def test_fused_campaign_entry_and_write_back():
+    """FleetCampaign.fused_campaign returns adaptive_campaign-shaped stats
+    and syncs model/ring/backend state so stepped runs continue after it."""
+    camp = _campaign(("kmeans", "gbt"))
+    exps = camp.experiments
+    rings0 = [e.trainer.cache.count for e in exps]
+    runs_seen0 = [e.trainer.runs_seen for e in exps]
+    stats, report = camp.fused_campaign(N_RUNS)
+    assert len(stats) == N_RUNS and len(stats[0]) == len(exps)
+    assert (report.nonfinite == 0).all()
+    for j, e in enumerate(exps):
+        assert e._run_idx == PROFILE_RUNS + N_RUNS
+        assert e.trainer.runs_seen == runs_seen0[j] + N_RUNS
+        assert e.trainer.cache.count == min(
+            rings0[j] + N_RUNS * e.job.n_components,
+            e.trainer.cache.capacity)
+        for r in range(N_RUNS):
+            st = stats[r][j]
+            assert st.kind == "enel" and st.runtime > 0.0
+            assert st.run_idx == PROFILE_RUNS + r + 1
+            assert e.stats[-N_RUNS + r] is st
+    # the written-back state supports continuing on the stepped path
+    post = camp.adaptive_round()
+    assert all(s.runtime > 0 and np.isfinite(s.runtime) for s in post)
+    assert [s.run_idx for s in post] == \
+        [PROFILE_RUNS + N_RUNS + 1] * len(exps)
+
+
+def test_fused_campaign_checkpointed_matches_single_pass():
+    camp_a = _campaign(("kmeans",), seed=21)
+    stats_a, rep_a = camp_a.fused_campaign(N_RUNS, write_back=False)
+    camp_b = _campaign(("kmeans",), seed=21)
+    stats_b, rep_b = camp_b.fused_campaign(N_RUNS, write_back=False,
+                                           checkpoint_every_runs=1)
+    assert len(rep_b.checkpoints) == N_RUNS - 1
+    _assert_tree_equal(rep_a.ys, rep_b.ys, "segmented ys:")
+    assert repr(stats_a) == repr(stats_b)
+    stats_c, rep_c = camp_b.resume_fused_campaign(
+        rep_b.plan, rep_b.checkpoints[-1], write_back=False)
+    _assert_tree_equal(rep_a.ys, rep_c.ys, "resumed ys:")
+    assert repr(stats_a) == repr(stats_c)
+
+
+def test_build_plan_rejections():
+    camp = _campaign(("kmeans",), seed=33)
+    exp = camp.experiments[0]
+    exp.chaos = ChaosInjector(ChaosSpec(name="t", nan_graphs_every=2),
+                              exp_seed=0)
+    with pytest.raises(ValueError, match="nan_fit"):
+        ck.build_plan(camp.experiments, 1)
+    exp.chaos = None
+    exp.scale_cap = 16
+    with pytest.raises(ValueError, match="capacity"):
+        ck.build_plan(camp.experiments, 1)
+    exp.scale_cap = None
+    tgt, exp.target = exp.target, None
+    with pytest.raises(ValueError, match="profile"):
+        ck.build_plan(camp.experiments, 1)
+    exp.target = tgt
+
+
+@pytest.mark.slow
+def test_fused_matches_stepped_fleet8_scenarios():
+    """Full acceptance sweep: a fleet of 8 slots covering all four paper
+    jobs (each twice, sharing class tables), node_failure on half and
+    nan_fit chaos on one — fused == stepped bit-exact."""
+    camp = _campaign(
+        ("lr", "mpc", "kmeans", "gbt") * 2,
+        seeds=(11, 12, 13, 14, 11, 12, 13, 14),
+        scenarios=("baseline", "node_failure", "node_failure", "baseline",
+                   "baseline", "node_failure", "node_failure", "baseline"),
+        chaos_on=(2,))
+    plan = ck.build_plan(camp.experiments, N_RUNS)
+    c_f, ys_f = ck.run_fused(plan)
+    c_s, ys_s = ck.run_stepped(plan)
+    _assert_tree_equal(ys_f, ys_s, "ys:")
+    _assert_tree_equal(c_f, c_s, "carry:")
+    assert (np.asarray(c_f["nonfinite"]) == 0).all()
