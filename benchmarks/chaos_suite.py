@@ -38,9 +38,10 @@ from typing import Dict, List
 import numpy as np
 
 try:
-    from benchmarks.fig5_timing import merge_bench_json
+    from benchmarks.fig5_timing import merge_bench_json, merge_latency_rows
 except ImportError:                      # run as a script from benchmarks/
-    from fig5_timing import merge_bench_json
+    from fig5_timing import merge_bench_json, merge_latency_rows
+from repro import obs
 from repro.sim.evaluate import (CHAOS_SCENARIOS, chaos_trace_identity,
                                 run_chaos_campaign)
 
@@ -68,6 +69,9 @@ def main(argv=None) -> int:
                     help="fail (exit 1) if total wall time exceeds this")
     ap.add_argument("--ci-smoke", action="store_true",
                     help="reduced 2-scenario x 2-job suite")
+    ap.add_argument("--flight-recorder-out", default="",
+                    help="write the controller flight-recorder span ring "
+                    "as JSONL to this path after the suite")
     ap.add_argument("--out", default="BENCH_decision.json")
     args = ap.parse_args(argv)
     t_start = time.time()
@@ -128,6 +132,25 @@ def main(argv=None) -> int:
             failures.append("crash/restore campaign diverged from the "
                             "uninterrupted trace")
 
+    # controller latency distributions (decision dispatch + fit) from the
+    # metrics registry: fixed-bucket histograms -> p50/p95/p99/max rows
+    lat_rows: List[Dict] = []
+    if obs.enabled():
+        lat_rows = [dict(r, source="chaos_suite")
+                    for r in obs.registry().rows()
+                    if r["kind"] == "histogram"]
+        for r in lat_rows:
+            if not r.get("count"):
+                continue
+            print(f"latency,{r['metric']},{r['labels']},"
+                  f"n={r['count']},p50={r['p50'] * 1e3:.3f}ms,"
+                  f"p95={r['p95'] * 1e3:.3f}ms,p99={r['p99'] * 1e3:.3f}ms,"
+                  f"max={r['max'] * 1e3:.3f}ms")
+    if args.flight_recorder_out:
+        obs.recorder().to_jsonl(args.flight_recorder_out)
+        print(f"flight recorder: {len(obs.recorder())} spans -> "
+              f"{os.path.abspath(args.flight_recorder_out)}")
+
     wall = time.time() - t_start
     summary = {"job": "__suite__", "reference": REFERENCE_SCENARIO,
                "reference_compliance_mean": ref_mean,
@@ -135,6 +158,8 @@ def main(argv=None) -> int:
                "adaptive_runs": adaptive, "trace_identity": trace_ok,
                "wall_s": wall, "failures": failures}
     merge_bench_json(args.out, {"chaos": all_rows + [summary]})
+    if lat_rows:
+        merge_latency_rows(args.out, lat_rows, "chaos_suite")
     print(f"wrote {os.path.abspath(args.out)} (total {wall:.0f}s)")
     if args.budget_s and wall > args.budget_s:
         failures.append(f"chaos suite took {wall:.0f}s "

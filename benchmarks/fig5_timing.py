@@ -37,6 +37,18 @@ def merge_bench_json(out_path: str, updates: Dict) -> None:
         json.dump(data, f, indent=2, default=float)
 
 
+def merge_latency_rows(out_path: str, rows, source: str) -> None:
+    """Merge controller latency-histogram rows into the shared ``latency``
+    section by writer ``source``: this writer's previous rows are replaced,
+    other writers' rows (fleet_bench vs chaos_suite) are kept."""
+    prev = []
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            prev = [r for r in json.load(f).get("latency", [])
+                    if r.get("source") != source]
+    merge_bench_json(out_path, {"latency": prev + list(rows)})
+
+
 def med_iqr(xs) -> Dict[str, float]:
     """CPU wall timings here are noisy (see CI flakes): report the median
     of k >= 5 repeats with the interquartile range instead of mean/std,

@@ -47,9 +47,11 @@ from typing import Dict, List
 import numpy as np
 
 try:
-    from benchmarks.fig5_timing import med_iqr, merge_bench_json
+    from benchmarks.fig5_timing import (med_iqr, merge_bench_json,
+                                        merge_latency_rows)
 except ImportError:                      # run as a script from benchmarks/
-    from fig5_timing import med_iqr, merge_bench_json
+    from fig5_timing import med_iqr, merge_bench_json, merge_latency_rows
+from repro import obs
 from repro.core import model as enel_model
 from repro.core.graph import summary_node
 from repro.core.service import DecisionService
@@ -298,21 +300,53 @@ def measure_budget(adaptive_runs: int = 2,
             except StopIteration:
                 pass
     compiles = enel_model.trace_count("fleet_sweep")
-    svc = campaign.service
+    # fault-envelope health straight from the registry-backed service
+    # stats: a clean campaign must answer every decision from the model
+    # (every robustness counter stays 0)
+    health = {k: v for k, v in campaign.service.stats().items()
+              if k not in ("decisions", "dispatches", "batched_away",
+                           "breaker_state")}
     return {"adaptive_runs_per_job": adaptive_runs,
             "visited_buckets": len(visited),
             "fleet_sweep_compiles": compiles,
             "bucket_bound": MAX_BUCKETS,
             "decisions": sum(st.decide_calls for e in exps
                              for st in e.stats if st.kind == "enel"),
-            # fault-envelope health: a clean campaign must answer every
-            # decision from the model (all of these stay 0)
-            "fallback_decisions": svc.fallback_decisions,
-            "guardrail_trips": svc.guardrail_trips,
-            "retries": svc.retries,
-            "dispatch_failures": svc.dispatch_failures,
-            "breaker_trips": svc.breaker_trips,
-            "shed_requests": svc.shed_requests}
+            **health}
+
+
+def measure_obs_overhead(size: int = 8, n_runs: int = 2, repeats: int = 5,
+                         profile_runs: int = 3) -> Dict:
+    """In-scan telemetry cost: the SAME fused campaign compiled with the
+    telemetry carry block on vs off (``build_plan(..., telemetry=)``),
+    per-decision wall-time delta.  This is the zero-cost-when-disabled
+    contract made measurable: ``ENEL_OBS=0`` compiles the ``off`` jaxpr."""
+    import jax
+
+    from repro.core import campaign_kernel as ck
+
+    camp = _fused_fleet(size, profile_runs, seed0=40)
+    out: Dict = {"fleet_size": size, "runs_per_campaign": n_runs,
+                 "repeats": repeats}
+    for tel in (False, True):
+        plan = ck.build_plan(camp.experiments, n_runs, telemetry=tel)
+        _, ys = ck.run_fused(plan)          # warmup: compiles this variant
+        jax.block_until_ready(ys)
+        decisions = int(np.asarray(ys["decided"]).sum())
+        ts = []
+        for _ in range(repeats):
+            t0 = time.time()
+            jax.block_until_ready(ck.run_fused(plan)[1])
+            ts.append(time.time() - t0)
+        m = med_iqr(ts)
+        key = "on" if tel else "off"
+        out[f"{key}_s_median"] = m["median"]
+        out[f"{key}_s_iqr"] = m["iqr"]
+        out[f"{key}_ms_per_decision"] = \
+            m["median"] / max(decisions, 1) * 1e3
+    out["decisions"] = decisions
+    out["overhead"] = out["on_s_median"] / out["off_s_median"] - 1.0
+    return out
 
 
 def main(argv=None) -> int:
@@ -330,6 +364,10 @@ def main(argv=None) -> int:
                     help="largest fleet the numpy replay runs for real; "
                          "bigger sizes extrapolate (numpy_estimated)")
     ap.add_argument("--no-fused", dest="fused", action="store_false")
+    ap.add_argument("--obs-overhead-max", type=float, default=0.0,
+                    help="measure telemetry-on vs telemetry-off fused "
+                    "campaign time and fail (exit 1) if the relative "
+                    "overhead exceeds this (0 skips the check)")
     ap.add_argument("--budget-s", type=float, default=0.0,
                     help="fail (exit 1) if total wall time exceeds this")
     ap.add_argument("--out", default="BENCH_decision.json")
@@ -370,7 +408,33 @@ def main(argv=None) -> int:
                   f"vs_live={r['speedup_vs_live']:.1f}x"
                   + (",live_est" if r["live_estimated"] else ""))
 
+    obs_row: Dict = {}
+    if args.obs_overhead_max > 0:
+        osize = int(args.fused_sizes.split(",")[0]) if args.fused_sizes \
+            else 8
+        obs_row = measure_obs_overhead(osize, args.fused_runs,
+                                       max(args.fused_repeats, 5),
+                                       args.profile_runs)
+        print(f"obs_overhead,size={obs_row['fleet_size']},"
+              f"off={obs_row['off_s_median'] * 1e3:.0f}ms,"
+              f"on={obs_row['on_s_median'] * 1e3:.0f}ms,"
+              f"overhead={obs_row['overhead'] * 100:+.1f}%")
+
+    # controller latency distributions (decision dispatch + fit) observed
+    # during this bench, from the registry's fixed-bucket histograms
+    lat_rows: List[Dict] = []
+    if obs.enabled():
+        lat_rows = [dict(r, source="fleet_bench")
+                    for r in obs.registry().rows()
+                    if r["kind"] == "histogram" and r.get("count")]
+        for r in lat_rows:
+            print(f"latency,{r['metric']},{r['labels']},n={r['count']},"
+                  f"p50={r['p50'] * 1e3:.3f}ms,p95={r['p95'] * 1e3:.3f}ms,"
+                  f"p99={r['p99'] * 1e3:.3f}ms,max={r['max'] * 1e3:.3f}ms")
+
     updates = {"fleet": fleet_rows, "fleet_budget": budget}
+    if obs_row:
+        updates["obs_overhead"] = obs_row
     if fused_rows:
         # merge-by-size so partial reruns (one big fleet at a time) refresh
         # their row without clobbering the others
@@ -383,6 +447,8 @@ def main(argv=None) -> int:
             prev[r["fleet_size"]] = r
         updates["fused"] = [prev[k] for k in sorted(prev)]
     merge_bench_json(args.out, updates)
+    if lat_rows:
+        merge_latency_rows(args.out, lat_rows, "fleet_bench")
     print(f"wrote {os.path.abspath(args.out)}")
 
     ok = True
@@ -405,6 +471,12 @@ def main(argv=None) -> int:
             print(f"FAIL: fused fleet {r['fleet_size']} produced "
                   f"{r['nonfinite_decisions']} non-finite decisions")
             ok = False
+    if obs_row and obs_row["overhead"] > args.obs_overhead_max:
+        print(f"FAIL: in-scan telemetry overhead "
+              f"{obs_row['overhead'] * 100:.1f}% > "
+              f"{args.obs_overhead_max * 100:.1f}% "
+              f"(fused size {obs_row['fleet_size']})")
+        ok = False
     wall = time.time() - t_start
     if args.budget_s and wall > args.budget_s:
         print(f"FAIL: fleet bench took {wall:.0f}s "

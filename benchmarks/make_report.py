@@ -172,6 +172,72 @@ def fleet_bench_table() -> str:
     return "\n".join(lines)
 
 
+def controller_health_table() -> str:
+    """One controller-health table over every registry-snapshot producer:
+    the chaos fleet rows' ``controller_health`` registry dumps, the
+    ``latency`` histogram section (fleet_bench + chaos_suite sources), the
+    ``fleet_budget`` fault-envelope counters, and the ``obs_overhead``
+    telemetry-cost row.  Schema-tolerant: every field through ``.get`` so
+    JSONs predating the observability PR render with em-dashes."""
+    p = ROOT / "BENCH_decision.json"
+    if not p.exists():
+        return ("(BENCH_decision.json missing — run benchmarks.fleet_bench "
+                "/ benchmarks.chaos_suite)")
+    data = json.loads(p.read_text())
+
+    def num(v, nd=0, scale=1.0, suffix=""):
+        if isinstance(v, bool) or not isinstance(v, (int, float)):
+            return "—"
+        return f"{v * scale:.{nd}f}{suffix}"
+
+    lines = []
+    lat = [r for r in data.get("latency", []) if r.get("count")]
+    if lat:
+        lines.append("| source | metric | labels | n | p50 (ms) | "
+                     "p95 (ms) | p99 (ms) | max (ms) |")
+        lines.append("|---|---|---|---|---|---|---|---|")
+        for r in lat:
+            lab = ",".join(f"{k}={v}" for k, v in
+                           sorted((r.get("labels") or {}).items())) or "—"
+            lines.append(
+                f"| {r.get('source', '—')} | {r.get('metric', '—')} | "
+                f"{lab} | {num(r.get('count'))} | "
+                f"{num(r.get('p50'), 3, 1e3)} | {num(r.get('p95'), 3, 1e3)} | "
+                f"{num(r.get('p99'), 3, 1e3)} | {num(r.get('max'), 3, 1e3)} |")
+    counters = []
+    budget = data.get("fleet_budget", {})
+    for k in ("fallback_decisions", "guardrail_trips", "retries",
+              "dispatch_failures", "breaker_trips", "shed_requests"):
+        if k in budget:
+            counters.append(("fleet_budget (clean campaign)", k, budget[k]))
+    for row in data.get("chaos", []):
+        for h in row.get("controller_health") or []:
+            if h.get("kind") == "counter" and h.get("value"):
+                lab = ",".join(f"{k}={v}" for k, v in
+                               sorted((h.get("labels") or {}).items()))
+                counters.append((f"chaos:{row.get('scenario', '?')}",
+                                 f"{h.get('metric')}{{{lab}}}",
+                                 h.get("value")))
+    if counters:
+        lines.append("")
+        lines.append("| source | counter | value |")
+        lines.append("|---|---|---|")
+        for src, name, val in counters:
+            lines.append(f"| {src} | {name} | {num(val)} |")
+    ov = data.get("obs_overhead", {})
+    if ov:
+        lines.append(
+            f"\nIn-scan telemetry overhead (fused fleet "
+            f"{ov.get('fleet_size', '?')}): telemetry off "
+            f"{num(ov.get('off_s_median'), 0, 1e3, 'ms')} vs on "
+            f"{num(ov.get('on_s_median'), 0, 1e3, 'ms')} — "
+            f"{num(ov.get('overhead'), 1, 1e2, '%')} "
+            f"(ENEL_OBS=0 compiles the off variant).")
+    return "\n".join(lines) if lines else \
+        "(no controller-health rows yet — run benchmarks.fleet_bench / " \
+        "benchmarks.chaos_suite)"
+
+
 def perf_log() -> str:
     cells = {
         "olmoe-1b-7b--train_4k": ["-base", "-opt1", "-opt2", "-opt3"],
@@ -212,13 +278,38 @@ MARKERS = {
     "<!-- ROOFLINE-NOTES -->": roofline_notes,
     "<!-- PERF-LOG -->": perf_log,
     "<!-- FLEET-BENCH -->": fleet_bench_table,
+    "<!-- CONTROLLER-HEALTH -->": controller_health_table,
 }
+
+
+_SECTION_TITLES = {
+    "<!-- TABLE3 -->": "Table 3: prediction accuracy",
+    "<!-- REPRO-CLAIMS -->": "Reproduction claims",
+    "<!-- FIG5 -->": "Fig. 5: fit/predict timing",
+    "<!-- DRYRUN-SUMMARY -->": "Dry-run summary",
+    "<!-- ROOFLINE-TABLE -->": "Roofline",
+    "<!-- ROOFLINE-NOTES -->": "Roofline notes",
+    "<!-- PERF-LOG -->": "Perf log",
+    "<!-- FLEET-BENCH -->": "Fleet / fused campaign bench",
+    "<!-- CONTROLLER-HEALTH -->": "Controller health (observability)",
+}
+
+
+def _fallback_template() -> str:
+    """Minimal template when EXPERIMENTS.template.md is absent: one
+    section per registered marker, so the report is still generable."""
+    parts = ["# Experiments\n"]
+    for marker in MARKERS:
+        parts.append(f"\n## {_SECTION_TITLES.get(marker, marker)}\n")
+        parts.append(f"\n{marker}\n")
+    return "".join(parts)
 
 
 def main():
     path = ROOT / "EXPERIMENTS.md"
     template = ROOT / "benchmarks" / "EXPERIMENTS.template.md"
-    text = template.read_text()     # always regenerate from the template
+    text = template.read_text() if template.exists() \
+        else _fallback_template()   # always regenerate from the template
     for marker, fn in MARKERS.items():
         if marker in text:
             try:

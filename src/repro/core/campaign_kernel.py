@@ -102,6 +102,11 @@ class PlanStatic(NamedTuple):
     retrain_every: int
     use_kernel: bool     # graph_prop Pallas kernel toggle (frozen at plan)
     levels: int          # bucketed propagation depth for the sweep
+    telemetry: bool = False  # in-scan obs block (ENEL_OBS; default at
+    #                          build_plan). False compiles the exact
+    #                          pre-observability program: same carry, same
+    #                          ys, same jaxpr — the ENEL_OBS=0 bit-exactness
+    #                          and zero-extra-traces guarantees.
 
 
 class CampaignPlan:
@@ -393,6 +398,39 @@ def _step(st: PlanStatic, dev, carry, t):
         "rt": outs[:, :, _O_RT], "failed": outs[:, :, _O_FAILED],
         "stage_clk": outs[:, :, _O_CLK],
     }
+
+    if st.telemetry:
+        # ---------------------------- in-scan flight-recorder telemetry:
+        # a compact per-step block widening the carry (decision-gap step
+        # deltas as the pick-latency proxy, per-run fallback/non-finite/
+        # fit-skip counts, per-run compliance margin) materialized into ys
+        # at run boundaries and replayed into the recorder at write-back
+        # (see ``replay_spans``).  Pure observation: nothing below feeds
+        # back into the decision or training ops above.
+        i32 = jnp.int32
+        tel = carry["tel"]
+        gap_valid = decide & (tel["last_dec_t"] >= 0)
+        gap = jnp.where(gap_valid, t - tel["last_dec_t"], 0).astype(i32)
+        last_dec_t = jnp.where(decide, t, tel["last_dec_t"]).astype(i32)
+        run_fb = tel["run_fallbacks"] + fb_used.astype(i32)
+        run_nf = tel["run_nonfinite"] + nonfin.astype(i32)
+        run_fs = tel["run_fit_skip"] + fit_skip
+        zero = jnp.zeros_like(run_fb)
+        new_carry["tel"] = {
+            "last_dec_t": last_dec_t,
+            "run_fallbacks": jnp.where(is_last, zero, run_fb),
+            "run_nonfinite": jnp.where(is_last, zero, run_nf),
+            "run_fit_skip": jnp.where(is_last, zero, run_fs),
+            "gap_sum": tel["gap_sum"] + gap,
+            "gap_n": tel["gap_n"] + gap_valid.astype(i32),
+        }
+        ys.update(
+            tel_dec_gap=gap,
+            tel_margin=jnp.where(is_last, dev["target"] - clock, f32(0.0)),
+            tel_run_fallbacks=jnp.where(is_last, run_fb, zero),
+            tel_run_nonfinite=jnp.where(is_last, run_nf, zero),
+            tel_run_fit_skip=jnp.where(is_last, run_fs, zero),
+        )
     return new_carry, ys
 
 
@@ -446,6 +484,76 @@ def carry_to_host(carry) -> Dict[str, Any]:
 
 def carry_from_host(carry) -> Dict[str, Any]:
     return jax.tree_util.tree_map(jnp.asarray, carry)
+
+
+def replay_spans(plan: CampaignPlan, ys, start: int = 0,
+                 recorder=None) -> int:
+    """Replay a fused-campaign ys block into the flight recorder.
+
+    A pure function of ``(plan, ys)``: the span stream depends only on the
+    materialized scan outputs, so ``run_fused`` and ``run_stepped`` of the
+    same plan replay to IDENTICAL ``(kind, attrs)`` streams (parity-tested
+    in ``tests/test_obs.py``).  Timestamps are the *logical* step index
+    (not wall time).  Returns the number of spans emitted.
+
+    Span kinds mirror the live stepped path where an in-scan analogue
+    exists: ``decision.pick`` per decided job (with the step-delta pick
+    latency proxy), ``decision.fallback`` for guardrail-clamped picks,
+    ``fit`` at run boundaries and ``run.end`` with the per-run compliance
+    margin + fallback/non-finite/fit-skip counts from the in-scan
+    telemetry block (plans built with ``telemetry=False`` have no tel
+    arrays, so only the base decision/fit spans replay).
+    """
+    from repro import obs as _obs
+    if recorder is None:
+        recorder = _obs.recorder()
+    if not _obs.enabled():
+        return 0
+    h = plan.host
+    ysn = {k: np.asarray(v) for k, v in ys.items()}
+    c_max = plan.static.c_max
+    names = h["job_names"]
+    scratch_at = h.get("scratch_at")
+    n = 0
+    for i in range(ysn["decided"].shape[0]):
+        t = start + i
+        r, k = divmod(t, c_max)
+        decided = ysn["decided"][i]
+        for j, name in enumerate(names):
+            if decided[j]:
+                attrs = dict(driver="fused", job=name, run=r, comp=k,
+                             scaleout=int(ysn["s_next"][i, j]),
+                             fallback=bool(ysn["fallback"][i, j]))
+                if "tel_dec_gap" in ysn:
+                    attrs["gap_steps"] = int(ysn["tel_dec_gap"][i, j])
+                recorder.emit("decision.pick", _ts=float(t), **attrs)
+                n += 1
+                if attrs["fallback"]:
+                    recorder.emit(
+                        "decision.fallback", _ts=float(t), driver="fused",
+                        job=name, run=r, comp=k, cause="guardrail",
+                        nonfinite=bool(ysn["nonfinite"][i, j]))
+                    n += 1
+        if k == c_max - 1:                      # run boundary: fit + run.end
+            scratch = bool(scratch_at[r]) if scratch_at is not None and \
+                r < len(scratch_at) else False
+            for j, name in enumerate(names):
+                recorder.emit(
+                    "fit", _ts=float(t), driver="fused", job=name, run=r,
+                    mode="scratch" if scratch else "tune",
+                    skipped=int(ysn["fit_skipped"][i, j]),
+                    loss=round(float(ysn["fit_loss"][i, j]), 6))
+                n += 1
+                if "tel_margin" in ysn:
+                    recorder.emit(
+                        "run.end", _ts=float(t), driver="fused", job=name,
+                        run=r, clock=round(float(ysn["clock"][i, j]), 4),
+                        margin=round(float(ysn["tel_margin"][i, j]), 4),
+                        fallbacks=int(ysn["tel_run_fallbacks"][i, j]),
+                        nonfinite=int(ysn["tel_run_nonfinite"][i, j]),
+                        fit_skipped=int(ysn["tel_run_fit_skip"][i, j]))
+                    n += 1
+    return n
 
 
 # =========================================================================
@@ -600,7 +708,8 @@ def _hist_tables(exp, c_max: int, k_pad: int, grid: np.ndarray,
 def build_plan(experiments, n_runs: int, *, inject_failures: bool = False,
                retrain_every: int = 5, steps: int = 160,
                fine_tune_steps: int = 60,
-               metric_dropout: float = 0.5) -> CampaignPlan:
+               metric_dropout: float = 0.5,
+               telemetry: Optional[bool] = None) -> CampaignPlan:
     """Compile a fused whole-campaign plan for ``n_runs`` adaptive runs of
     a profiled fleet sharing one :class:`BatchedClusterSim`.
 
@@ -820,12 +929,25 @@ def build_plan(experiments, n_runs: int, *, inject_failures: bool = False,
         "fallbacks": np.zeros(J, np.int32),
         "nonfinite": np.zeros(J, np.int32),
     }
+    if telemetry is None:
+        from repro import obs as _obs
+        telemetry = _obs.enabled()
+    if telemetry:
+        init["tel"] = {
+            "last_dec_t": np.full(J, -1, np.int32),
+            "run_fallbacks": np.zeros(J, np.int32),
+            "run_nonfinite": np.zeros(J, np.int32),
+            "run_fit_skip": np.zeros(J, np.int32),
+            "gap_sum": np.zeros(J, np.int32),
+            "gap_n": np.zeros(J, np.int32),
+        }
     static = PlanStatic(
         c_max=c_max, s_max=s_max, lo=lo, tune_rows=pow2_bucket(c_max),
         scratch_steps=_round_steps(steps),
         tune_steps=_round_steps(fine_tune_steps),
         retrain_every=retrain_every,
-        use_kernel=graph_prop_kernel_enabled(), levels=levels)
+        use_kernel=graph_prop_kernel_enabled(), levels=levels,
+        telemetry=bool(telemetry))
     host = {
         "predicted": predicted, "targets": target.copy(),
         "n_comp": n_comp.copy(), "decide_tab": decide_tab.copy(),
@@ -835,5 +957,6 @@ def build_plan(experiments, n_runs: int, *, inject_failures: bool = False,
         "job_names": [e.job.name for e in exps],
         "run_idx0": [e._run_idx for e in exps],
         "n_runs": int(n_runs),
+        "scratch_at": scratch_at.copy(),
     }
     return CampaignPlan(static, dev, init, host)

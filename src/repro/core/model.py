@@ -71,6 +71,13 @@ TRACE_COUNTS: Counter = Counter()
 
 def record_trace(name: str) -> None:
     TRACE_COUNTS[name] += 1
+    # mirror into the unified obs registry (same count, queryable alongside
+    # the other controller metrics); TRACE_COUNTS stays the canonical API.
+    from repro import obs
+    if obs.enabled():
+        obs.registry().counter(
+            "enel_jit_traces_total", "jit retraces per instrumented fn"
+        ).labels(fn=name).inc()
 
 
 def trace_count(name: str) -> int:

@@ -33,6 +33,7 @@ when exact per-candidate contexts are required.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from collections import OrderedDict, defaultdict
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -40,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.bell import BellModel, initial_scaleout
 from repro.core.fallback import FallbackPolicy
 from repro.core.graph import (CTX_DIM, N_METRICS, ComponentGraph, NodeAttrs,
@@ -79,13 +81,26 @@ class _TemplateDeviceCache:
     bucketing a whole campaign visits only a handful of keys anyway.
     """
 
+    _ids = itertools.count()        # obs label allocator
+
     def __init__(self, max_slots: int = 8):
         self.max_slots = max_slots
         self._slots: "OrderedDict[Tuple[int, int, int], Tuple[Dict, Dict]]" \
             = OrderedDict()
-        self.transfers = 0          # device uploads performed
-        self.skips = 0              # uploads avoided by the host diff
-        self.evictions = 0          # LRU slots dropped
+        # upload/skip/eviction counters: registry-backed behind the
+        # original attribute API (properties installed below)
+        reg = obs.registry()
+        name = f"tc{next(self._ids)}"
+        self._obs_counters = {
+            "transfers": reg.counter("enel_template_cache_transfers_total",
+                                     "device uploads performed"),
+            "skips": reg.counter("enel_template_cache_skips_total",
+                                 "uploads avoided by the host diff"),
+            "evictions": reg.counter("enel_template_cache_evictions_total",
+                                     "LRU slots dropped"),
+        }
+        self._obs_counters = {k: v.labels(cache=name)
+                              for k, v in self._obs_counters.items()}
 
     def adopt(self, template: SweepTemplate, n_candidates: int
               ) -> SweepTemplate:
@@ -117,6 +132,22 @@ class _TemplateDeviceCache:
         return dataclasses.replace(
             template, base={kk: dev[kk] for kk in template.base},
             h_onehot=dev["__h_onehot__"])
+
+
+def _install_cache_counter_properties():
+    def make(attr):
+        def fget(self):
+            return int(self._obs_counters[attr].value)
+
+        def fset(self, value):
+            self._obs_counters[attr].set(value)
+        return property(fget, fset)
+
+    for attr in ("transfers", "skips", "evictions"):
+        setattr(_TemplateDeviceCache, attr, make(attr))
+
+
+_install_cache_counter_properties()
 
 
 # one device-side reduction + compliant pick over the sweep output; the

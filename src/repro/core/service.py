@@ -35,6 +35,7 @@ Fault tolerance (the control plane assumes the model CAN fail):
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from collections import OrderedDict, defaultdict
 from typing import Dict, List, Optional, Sequence
@@ -43,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.fallback import FallbackPolicy
 from repro.core.graph import ladder_bucket
 from repro.core.model import (assemble_sweep_batch, pick_candidate,
@@ -50,6 +52,28 @@ from repro.core.model import (assemble_sweep_batch, pick_candidate,
                               sweep_totals_ok)
 
 JOB_LADDER = (1, 2, 4, 8, 16, 32)       # job axis J (pad by repeating a row)
+
+# service robustness counters: attribute name -> (metric family, help).
+# Registered in the unified obs registry, exposed behind the original
+# attribute API via properties (see _install_counter_properties below).
+_SERVICE_COUNTERS = {
+    "decisions": ("enel_service_decisions_total", "requests served"),
+    "dispatches": ("enel_service_dispatches_total", "jit dispatches issued"),
+    "batched_away": ("enel_service_batched_away_total",
+                     "dispatches saved vs one-per-request"),
+    "fallback_decisions": ("enel_service_fallback_decisions_total",
+                           "requests answered by the fallback policy"),
+    "guardrail_trips": ("enel_service_guardrail_trips_total",
+                        "non-finite sweep rows caught by the guardrail"),
+    "retries": ("enel_service_retries_total",
+                "dispatch attempts beyond the first"),
+    "dispatch_failures": ("enel_service_dispatch_failures_total",
+                          "failed dispatch attempts (incl. retried)"),
+    "shed_requests": ("enel_service_shed_requests_total",
+                      "requests rejected under overload"),
+}
+
+_BREAKER_STATE_CODE = {"closed": 0, "half_open": 1, "open": 2}
 
 
 class DispatchFault(RuntimeError):
@@ -219,46 +243,84 @@ class CircuitBreaker:
 
     CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
 
-    def __init__(self, threshold: int = 3, probe_after: int = 4):
+    def __init__(self, threshold: int = 3, probe_after: int = 4,
+                 name: str = "breaker"):
         self.threshold = int(threshold)
         self.probe_after = int(probe_after)
+        self.name = name
         self.state = self.CLOSED
         self.consecutive_failures = 0
-        self.trips = 0
         self._blocked_calls = 0
+        self.last_transition_seq = -1   # flight-recorder seq of last flip
+        reg = obs.registry()
+        self._trips = reg.counter(
+            "enel_breaker_trips_total",
+            "breaker transitions into OPEN").labels(service=name)
+        self._state_gauge = reg.gauge(
+            "enel_breaker_state",
+            "1 for the current breaker state, 0 otherwise")
+        self._sync_state_gauge()
+
+    @property
+    def trips(self) -> int:
+        return int(self._trips.value)
+
+    @trips.setter
+    def trips(self, v: int) -> None:
+        self._trips.set(v)
+
+    def _sync_state_gauge(self) -> None:
+        for s in (self.CLOSED, self.OPEN, self.HALF_OPEN):
+            self._state_gauge.labels(service=self.name, state=s).set(
+                1.0 if s == self.state else 0.0)
+
+    def _transition(self, new_state: str, reason: str) -> None:
+        if new_state == self.state:
+            return
+        self.last_transition_seq = obs.emit(
+            "breaker.transition", service=self.name,
+            src=self.state, dst=new_state, reason=reason,
+            trips=self.trips, failures=self.consecutive_failures)
+        self.state = new_state
+        self._sync_state_gauge()
 
     def allow(self) -> bool:
         """One call per service decide(): may this call dispatch?"""
         if self.state == self.OPEN:
             self._blocked_calls += 1
             if self._blocked_calls >= self.probe_after:
-                self.state = self.HALF_OPEN
+                self._transition(self.HALF_OPEN, "probe_window")
             return False
         return True                     # closed, or half-open (the probe)
 
     def record(self, success: bool) -> None:
         if success:
             self.consecutive_failures = 0
-            self.state = self.CLOSED
+            self._transition(self.CLOSED, "dispatch_ok")
             return
         self.consecutive_failures += 1
         if self.state == self.HALF_OPEN or \
                 self.consecutive_failures >= self.threshold:
-            self.state = self.OPEN
+            reason = ("probe_failed" if self.state == self.HALF_OPEN
+                      else "failure_threshold")
             self._blocked_calls = 0
             self.trips += 1
+            self._transition(self.OPEN, reason)
 
     def snapshot(self) -> Dict:
         return {"state": self.state,
                 "consecutive_failures": self.consecutive_failures,
                 "trips": self.trips,
-                "blocked_calls": self._blocked_calls}
+                "blocked_calls": self._blocked_calls,
+                "last_transition_seq": self.last_transition_seq}
 
     def restore(self, st: Dict) -> None:
         self.state = st["state"]
         self.consecutive_failures = st["consecutive_failures"]
         self.trips = st["trips"]
         self._blocked_calls = st["blocked_calls"]
+        self.last_transition_seq = st.get("last_transition_seq", -1)
+        self._sync_state_gauge()        # registry labels track restored state
 
 
 class DecisionService:
@@ -287,31 +349,34 @@ class DecisionService:
     may raise :class:`DispatchFault`.
     """
 
+    _ids = itertools.count()        # default obs label allocator
+
     def __init__(self, double_buffer: bool = True, *,
                  fallback: Optional[FallbackPolicy] = None,
                  max_retries: int = 2, backoff_base_s: float = 0.02,
                  backoff_cap_s: float = 0.25,
                  deadline_s: Optional[float] = None,
                  breaker_threshold: int = 3, breaker_probe_after: int = 4,
-                 shed_capacity: Optional[int] = None, seed: int = 0):
+                 shed_capacity: Optional[int] = None, seed: int = 0,
+                 obs_name: Optional[str] = None):
         self.double_buffer = double_buffer
         self.fallback = fallback or FallbackPolicy()
         self.max_retries = int(max_retries)
         self.backoff_base_s = float(backoff_base_s)
         self.backoff_cap_s = float(backoff_cap_s)
         self.deadline_s = deadline_s
-        self.breaker = CircuitBreaker(breaker_threshold, breaker_probe_after)
+        # obs_name keys this instance's registry series; pass a stable name
+        # to make a restored-from-checkpoint service label-identical.
+        self.obs_name = obs_name or f"svc{next(self._ids)}"
+        reg = obs.registry()
+        self._obs_counters = {
+            attr: reg.counter(family, help).labels(service=self.obs_name)
+            for attr, (family, help) in _SERVICE_COUNTERS.items()}
+        self.breaker = CircuitBreaker(breaker_threshold, breaker_probe_after,
+                                      name=self.obs_name)
         self.shed_capacity = shed_capacity
         self.fault_injector = None      # chaos hook (see repro.sim.chaos)
         self._rng = np.random.RandomState(seed ^ 0xbac0ff)  # backoff jitter
-        self.decisions = 0          # requests served
-        self.dispatches = 0         # jit dispatches issued
-        self.batched_away = 0       # dispatches saved vs one-per-request
-        self.fallback_decisions = 0  # requests answered by the policy
-        self.guardrail_trips = 0    # ... of which: non-finite sweep rows
-        self.retries = 0            # dispatch attempts beyond the first
-        self.dispatch_failures = 0  # failed dispatch attempts (incl. retried)
-        self.shed_requests = 0      # requests rejected under overload
         # identity-memoized stacks: params / template-base device arrays /
         # edge lists are object-stable across decision rounds (the scalers'
         # caches re-serve the same ndarrays while values are unchanged), so
@@ -377,8 +442,13 @@ class DecisionService:
     # ------------------------------------------------------ failure envelope
     def _fallback_result(self, req: DecisionRequest,
                          totals_row: Optional[np.ndarray] = None,
-                         shed: bool = False) -> DecisionResult:
-        """Answer one request from the bounded heuristic policy."""
+                         shed: bool = False, cause: str = "guardrail",
+                         cause_seq: int = -1) -> DecisionResult:
+        """Answer one request from the bounded heuristic policy.
+
+        ``cause`` names why the model did not answer (shed, breaker_open,
+        retries_exhausted, guardrail); ``cause_seq`` links the span to the
+        flight-recorder event that forced the fallback."""
         totals = None
         if totals_row is not None:
             totals = {s: float(totals_row[ci])
@@ -397,26 +467,35 @@ class DecisionService:
         self.fallback_decisions += 1
         if shed:
             self.shed_requests += 1
+        obs.emit("decision.fallback", service=self.obs_name, cause=cause,
+                 cause_seq=cause_seq, shed=shed, scaleout=int(s),
+                 from_scaleout=int(req.current_scaleout))
         return res
 
     def _dispatch_with_retry(self, key: tuple,
                              group: List[DecisionRequest],
                              t_start: float, deadline: Optional[float]):
         """Dispatch one group under the retry/backoff/deadline envelope;
-        returns the jit output or None when the envelope is exhausted."""
+        returns (jit output or None when the envelope is exhausted,
+        retries used, flight-recorder seq of the last fault span)."""
         attempt = 0
+        fault_seq = -1
         while True:
             try:
-                return self._dispatch_group(key, group)
-            except DispatchFault:
+                return self._dispatch_group(key, group), attempt, fault_seq
+            except DispatchFault as e:
                 self.dispatch_failures += 1
+                fault_seq = obs.emit(
+                    "dispatch.fault", service=self.obs_name,
+                    bucket=str(key), group=len(group), attempt=attempt,
+                    fault=type(e).__name__)
                 sleep = min(self.backoff_cap_s,
                             self.backoff_base_s * (2 ** attempt))
                 sleep *= 0.5 + self._rng.rand()     # seeded jitter
                 if attempt >= self.max_retries or (
                         deadline is not None and
                         time.time() - t_start + sleep > deadline):
-                    return None
+                    return None, attempt, fault_seq
                 time.sleep(sleep)
                 self.retries += 1
                 attempt += 1
@@ -443,7 +522,9 @@ class DecisionService:
         live = self._shed(requests, results)
         if live and not self.breaker.allow():       # open: fallback for all
             for i in live:
-                results[i] = self._fallback_result(requests[i])
+                results[i] = self._fallback_result(
+                    requests[i], cause="breaker_open",
+                    cause_seq=self.breaker.last_transition_seq)
             live = []
         groups: Dict[tuple, List[int]] = defaultdict(list)
         for i in live:
@@ -452,18 +533,20 @@ class DecisionService:
         staged = []
         dispatch_ok = True
         for key, idxs in groups.items():
-            out = self._dispatch_with_retry(
+            out, retried, fault_seq = self._dispatch_with_retry(
                 key, [requests[i] for i in idxs], t_start, deadline)
             if out is None:                         # envelope exhausted
                 dispatch_ok = False
                 for i in idxs:
-                    results[i] = self._fallback_result(requests[i])
+                    results[i] = self._fallback_result(
+                        requests[i], cause="retries_exhausted",
+                        cause_seq=fault_seq)
                 continue
             if not self.double_buffer:
                 # synchronous mode: fetch before stacking the next bucket
                 out = (jax.device_get((out[0], out[1], out[3])), out[2])
-            staged.append((idxs, out))
-        for idxs, out in staged:
+            staged.append((idxs, key, retried, out))
+        for idxs, key, retried, out in staged:
             if self.double_buffer:
                 picked, totals, per, ok = out
                 # ONE host transfer per group: picks + totals + ok flags
@@ -471,12 +554,19 @@ class DecisionService:
                     (picked, totals, ok))
             else:
                 (picked_np, totals_np, ok_np), per = out
+            obs.emit("decision.dispatch", service=self.obs_name,
+                     bucket=str(key), group=len(idxs), retries=retried,
+                     latency_s=round(time.time() - t_start, 6))
             for gi, ri in enumerate(idxs):
                 req = requests[ri]
                 if not bool(ok_np[gi]):     # guardrail: poisoned sweep row
                     self.guardrail_trips += 1
+                    trip_seq = obs.emit(
+                        "guardrail.trip", service=self.obs_name,
+                        bucket=str(key), row=gi)
                     results[ri] = self._fallback_result(
-                        req, totals_row=totals_np[gi])
+                        req, totals_row=totals_np[gi], cause="guardrail",
+                        cause_seq=trip_seq)
                     continue
                 sl = int(picked_np[gi])
                 tot = {s: float(totals_np[gi, ci])
@@ -494,7 +584,23 @@ class DecisionService:
             share = (time.time() - t_start) / len(requests)
             for r in results:
                 r.service_seconds = share
+            if obs.enabled():
+                hist = obs.registry().histogram(
+                    "enel_decision_latency_seconds",
+                    "per-request share of decide() wall time"
+                ).labels(service=self.obs_name)
+                for _ in requests:
+                    hist.observe(share)
         return results
+
+    # ----------------------------------------------------------- telemetry
+    def stats(self) -> Dict:
+        """All robustness counters + breaker state as one plain dict (the
+        registry-backed successor of reading the attributes one by one)."""
+        out = {attr: getattr(self, attr) for attr in _SERVICE_COUNTERS}
+        out["breaker_trips"] = self.breaker_trips
+        out["breaker_state"] = self.breaker.state
+        return out
 
     # --------------------------------------------------- checkpoint support
     def snapshot_state(self) -> Dict:
@@ -528,3 +634,22 @@ class DecisionService:
         if "fault_injector" in st and self.fault_injector is not None and \
                 hasattr(self.fault_injector, "restore"):
             self.fault_injector.restore(st["fault_injector"])
+
+
+def _install_counter_properties():
+    """Expose the registry-backed service counters behind the original
+    attribute API (``svc.retries``, ``svc.decisions += 1`` ...): reads and
+    read-modify-writes hit the labeled CounterSeries in the obs registry."""
+    def make(attr):
+        def fget(self):
+            return int(self._obs_counters[attr].value)
+
+        def fset(self, value):
+            self._obs_counters[attr].set(value)
+        return property(fget, fset)
+
+    for attr in _SERVICE_COUNTERS:
+        setattr(DecisionService, attr, make(attr))
+
+
+_install_counter_properties()

@@ -23,15 +23,29 @@ import functools
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import itertools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import model as enel_model
 from repro.core.graph import (ComponentGraph, TrainingCache, pow2_bucket,
                               stack_graphs)
 
 HUBER_DELTA = 10.0
+
+# trainer non-finite-guard telemetry: attribute -> (family, kind, help).
+# Registered in the unified obs registry behind the original attribute API.
+_TRAINER_COUNTERS = {
+    "nonfinite_steps": ("enel_trainer_nonfinite_steps_total", "counter",
+                        "Adam steps skipped by the non-finite guard"),
+    "last_skipped_steps": ("enel_trainer_last_skipped_steps", "gauge",
+                           "guard-skipped steps in the most recent fit"),
+    "poisoned_fits": ("enel_trainer_poisoned_fits_total", "counter",
+                      "fits where every step was guard-skipped"),
+}
 
 
 def _huber(err: jax.Array, delta: float = HUBER_DELTA) -> jax.Array:
@@ -177,8 +191,10 @@ def _round_steps(steps: int) -> int:
 class EnelTrainer:
     """One global reusable model + the paper's (re)training cadence."""
 
+    _ids = itertools.count()        # default obs label allocator
+
     def __init__(self, seed: int = 0, lr: float = 5e-3,
-                 cache_capacity: int = 96):
+                 cache_capacity: int = 96, obs_name: Optional[str] = None):
         self.seed = seed
         self.lr = lr
         self.params = enel_model.init_enel(jax.random.PRNGKey(seed))
@@ -190,12 +206,26 @@ class EnelTrainer:
         self.cache: Optional[TrainingCache] = None
         self.cache_capacity = cache_capacity
         self._fit_calls = 0
-        # non-finite guard telemetry (see _adam_update): steps skipped by
-        # the in-scan guard, and fits where EVERY step was skipped (the
-        # cache-quarantine + retry path)
-        self.nonfinite_steps = 0
-        self.last_skipped_steps = 0
-        self.poisoned_fits = 0
+        # non-finite guard telemetry (see _adam_update): registry-backed
+        # behind the original attribute API (nonfinite_steps /
+        # last_skipped_steps / poisoned_fits properties below)
+        self.obs_name = obs_name or f"tr{next(self._ids)}"
+        reg = obs.registry()
+        self._obs_counters = {
+            attr: (reg.counter(fam, help) if kind == "counter"
+                   else reg.gauge(fam, help)).labels(trainer=self.obs_name)
+            for attr, (fam, kind, help) in _TRAINER_COUNTERS.items()}
+
+    def _emit_fit(self, route: str, scratch: bool, steps: int, loss: float,
+                  retried: bool = False) -> None:
+        obs.emit("fit", trainer=self.obs_name, route=route,
+                 mode="scratch" if scratch else "tune", steps=steps,
+                 skipped=self.last_skipped_steps, retried=retried,
+                 loss=round(float(loss), 6),
+                 seconds=round(self.last_fit_seconds, 6))
+        obs.observe("enel_fit_seconds", self.last_fit_seconds,
+                    trainer=self.obs_name,
+                    mode="scratch" if scratch else "tune")
 
     def _reset_opt(self):
         zeros = jax.tree_util.tree_map(jnp.zeros_like, self.params)
@@ -242,7 +272,9 @@ class EnelTrainer:
             enel_model.graph_prop_kernel_enabled())
         self._note_skipped(skipped, steps)
         self.last_fit_seconds = time.time() - t0
-        return float(loss)
+        loss = float(loss)
+        self._emit_fit("legacy", from_scratch, steps, loss)
+        return loss
 
     def _note_skipped(self, skipped, steps: int) -> None:
         self.last_skipped_steps = int(skipped)
@@ -307,10 +339,14 @@ class EnelTrainer:
                 self.cache.quarantine_nonfinite() > 0:
             # params were fine but the batch was poisoned: the corrupt rows
             # are quarantined now, so one retry trains on the healed ring
+            self._emit_fit("resident", from_scratch, n_steps, float(loss),
+                           retried=True)
             return self.fit_resident(steps=steps, from_scratch=from_scratch,
                                      metric_dropout=metric_dropout,
                                      latest_only=latest_only, _retry=False)
-        return float(loss)
+        loss = float(loss)
+        self._emit_fit("resident", from_scratch, n_steps, loss)
+        return loss
 
     def observe_run_resident(self, *, retrain_every: int = 5,
                              steps: int = 200,
@@ -400,3 +436,20 @@ class EnelTrainer:
         n_cand, n_rem = deltas["a_raw"].shape[:2]
         per = self.predict_sweep_device(template, deltas, use_kernel)
         return np.asarray(per)[:n_cand, :n_rem]
+
+
+def _install_counter_properties():
+    """Registry-backed guard counters behind the original attribute API."""
+    def make(attr):
+        def fget(self):
+            return int(self._obs_counters[attr].value)
+
+        def fset(self, value):
+            self._obs_counters[attr].set(value)
+        return property(fget, fset)
+
+    for attr in _TRAINER_COUNTERS:
+        setattr(EnelTrainer, attr, make(attr))
+
+
+_install_counter_properties()

@@ -30,6 +30,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.service import DecisionService, apply_capacity
 from repro.dataflow.runner import JobExperiment, RunStats
 from repro.dataflow.workloads import SCALEOUT_RANGE
@@ -79,6 +80,7 @@ class CampaignCheckpoint:
     all_stats: List[List[RunStats]] = field(default_factory=list)
     service_state: Dict = field(default_factory=dict)
     extra: Optional[Dict] = None           # arrival-campaign pool state
+    obs_state: Optional[Dict] = None       # registry + flight-recorder state
 
     def save(self, path: str) -> None:
         """Persist to disk (host arrays only — snapshots are numpy)."""
@@ -104,6 +106,7 @@ class FusedCheckpoint:
     n_steps: int
     carry: Dict
     ys: Dict
+    obs_state: Optional[Dict] = None       # registry + flight-recorder state
 
     def save(self, path: str) -> None:
         with open(path, "wb") as f:
@@ -386,12 +389,15 @@ class FleetCampaign:
                     "state": exp.snapshot_state(), "log": None,
                     "backend_now": None,
                     "stats": copy.deepcopy(stats.get(i)) if mid else None})
+        obs.emit("checkpoint", kind=kind, run_idx=run_idx,
+                 round_idx=round_idx, mid_run=mid)
         return CampaignCheckpoint(
             kind=kind, method=method, inject_failures=inject_failures,
             n_runs=n_runs, run_idx=run_idx, round_idx=round_idx,
             checkpoint_every=checkpoint_every, mid_run=mid, exps=exps,
             all_stats=all_c, service_state=self.service.snapshot_state(),
-            extra=copy.deepcopy(extra))
+            extra=copy.deepcopy(extra),
+            obs_state=obs.snapshot() if obs.enabled() else None)
 
     def _replay_exp(self, i: int, entry: Dict, method: str,
                     inject_failures: bool):
@@ -417,6 +423,13 @@ class FleetCampaign:
         """Continue a campaign from a checkpoint; the completed campaign's
         stats (and decision traces) match an uninterrupted run exactly."""
         assert ckpt.kind == "adaptive", "use resume_arrival_campaign"
+        if ckpt.obs_state is not None and obs.enabled():
+            # rewind the registry + recorder to checkpoint time so the
+            # resumed campaign's span/metric stream continues exactly
+            # where the checkpointed one left off (trace identity)
+            obs.restore(ckpt.obs_state)
+        obs.emit("restore", kind="adaptive", run_idx=ckpt.run_idx,
+                 round_idx=ckpt.round_idx, mid_run=ckpt.mid_run)
         self.service.restore_state(ckpt.service_state)
         all_stats = copy.deepcopy(ckpt.all_stats)
         if not ckpt.mid_run:
@@ -514,6 +527,10 @@ class FleetCampaign:
         """Continue a fused campaign from a :class:`FusedCheckpoint`; the
         completed campaign's stats match an uninterrupted one exactly."""
         from repro.core import campaign_kernel as ck
+        if ckpt.obs_state is not None and obs.enabled():
+            obs.restore(ckpt.obs_state)
+        obs.emit("restore", kind="fused", step=ckpt.step,
+                 n_steps=ckpt.n_steps)
         carry = ck.carry_from_host(ckpt.carry)
         return self._fused_drive(
             ck, plan, carry, start=ckpt.step, pieces=[ckpt.ys],
@@ -535,9 +552,12 @@ class FleetCampaign:
             pieces.append(to_host(ys))
             t = t1
             if checkpoint_every_runs > 0 and t < plan.n_steps:
+                obs.emit("checkpoint", kind="fused", step=t,
+                         n_steps=plan.n_steps)
                 ckpts.append(FusedCheckpoint(
                     step=t, n_steps=plan.n_steps,
-                    carry=ck.carry_to_host(carry), ys=cat(pieces)))
+                    carry=ck.carry_to_host(carry), ys=cat(pieces),
+                    obs_state=obs.snapshot() if obs.enabled() else None))
         ys_all = cat(pieces)
         stats = materialize_fused(plan, ys_all)
         carry_h = ck.carry_to_host(carry)
@@ -546,11 +566,12 @@ class FleetCampaign:
             fallbacks=np.asarray(carry_h["fallbacks"]),
             nonfinite=np.asarray(carry_h["nonfinite"]), checkpoints=ckpts)
         if write_back:
-            self._fused_write_back(plan, carry_h, stats)
+            self._fused_write_back(plan, carry_h, stats, ys=ys_all)
         return stats, report
 
     def _fused_write_back(self, plan, carry: Dict,
-                          stats: List[List[RunStats]]) -> None:
+                          stats: List[List[RunStats]],
+                          ys: Optional[Dict] = None) -> None:
         """Sync the scan's final state into the host experiments: model
         params/opt, the resident training ring, run counters, per-run
         stats, and the backend slots' clock/interference carry (the RNG
@@ -561,6 +582,11 @@ class FleetCampaign:
         """
         import jax
         import jax.numpy as jnp
+        if ys is not None and obs.enabled():
+            # the in-scan telemetry block becomes the same span stream the
+            # stepped driver would have produced (parity-tested)
+            from repro.core import campaign_kernel as ck
+            ck.replay_spans(plan, ys)
         n_runs = plan.host["n_runs"]
         for j, exp in enumerate(self.experiments):
             tr = exp.trainer
@@ -631,6 +657,10 @@ class FleetCampaign:
         """Continue an arrival campaign from a checkpoint; the completed
         campaign's stats and capacity trace match an uninterrupted run."""
         assert ckpt.kind == "arrival", "use resume_adaptive_campaign"
+        if ckpt.obs_state is not None and obs.enabled():
+            obs.restore(ckpt.obs_state)
+        obs.emit("restore", kind="arrival", run_idx=ckpt.run_idx,
+                 round_idx=ckpt.round_idx, mid_run=ckpt.mid_run)
         self.service.restore_state(ckpt.service_state)
         ex = copy.deepcopy(ckpt.extra)
         rng = np.random.RandomState(0)

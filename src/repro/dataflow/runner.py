@@ -35,6 +35,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.graph import (ComponentGraph, NodeAttrs, build_graph,
                               historical_summary, summary_node)
 from repro.core.scaling import EnelScaler
@@ -484,6 +485,26 @@ class JobExperiment:
                       retries=self.service.retries - svc0[0],
                       breaker_trips=self.service.breaker_trips - svc0[1])
         self.stats.append(st)
+        if obs.enabled():
+            reg = obs.registry()
+            labels = {"job": job.name, "kind": method}
+            reg.counter("enel_runs_total",
+                        "adaptive runs completed").labels(**labels).inc()
+            if run.violation > 0:
+                reg.counter("enel_run_violations_total",
+                            "runs exceeding target").labels(**labels).inc()
+            obs.emit("run.end", driver="stepped", job=job.name,
+                     run=st.run_idx, kind=method,
+                     runtime=round(st.runtime, 6),
+                     target=round(st.target, 6),
+                     violation=round(st.violation, 6),
+                     rescales=st.n_rescales, failures=st.n_failures,
+                     fallbacks=st.fallback_decisions,
+                     shed=st.shed_requests, retries=st.retries,
+                     breaker_trips=st.breaker_trips,
+                     fit_seconds=round(st.fit_seconds, 6),
+                     decide_seconds=round(st.decide_seconds, 6),
+                     decide_calls=st.decide_calls)
         return st
 
 

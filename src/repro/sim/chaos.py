@@ -41,6 +41,8 @@ import dataclasses
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro import obs
+
 
 @dataclass(frozen=True)
 class ChaosSpec:
@@ -106,6 +108,8 @@ class ChaosInjector:
         bad.runtime[bad.runtime_valid] = np.nan
         graphs[run_idx % len(graphs)] = bad
         self.graphs_poisoned += 1
+        obs.emit("chaos", family="nan_graphs", spec=self.spec.name,
+                 run=run_idx, victim=run_idx % len(graphs))
         return graphs
 
     # ---------------------------------------------------------- trainer path
@@ -123,12 +127,16 @@ class ChaosInjector:
                         if jnp.issubdtype(v.dtype, jnp.floating) else v)
                     for k, v in cache.buffers.items()}
                 self.cache_rows_corrupted += 1
+                obs.emit("chaos", family="cache_corrupt",
+                         spec=self.spec.name, run=run_idx, slot=slot)
         if self._fires(self.spec.nan_fit_every, run_idx):
             import jax
             import jax.numpy as jnp
             trainer.params = jax.tree_util.tree_map(
                 lambda p: jnp.full_like(p, jnp.nan), trainer.params)
             self.fits_poisoned += 1
+            obs.emit("chaos", family="nan_fit", spec=self.spec.name,
+                     run=run_idx)
 
     # ------------------------------------------------------------ checkpoint
     def snapshot(self) -> Dict:
@@ -168,6 +176,9 @@ class DispatchChaos:
         if self._burst_left > 0:
             self._burst_left -= 1
             self.timeouts += 1
+            obs.emit("chaos", family="dispatch_timeout",
+                     spec=self.spec.name, dispatch=self.dispatches,
+                     burst_left=self._burst_left)
             raise DispatchTimeout(
                 f"chaos[{self.spec.name}]: injected dispatch timeout "
                 f"(burst, {self._burst_left} left)")
@@ -175,6 +186,9 @@ class DispatchChaos:
         if self.dispatches % self.spec.timeout_every == 0:
             self._burst_left = max(int(self.spec.timeout_burst), 1) - 1
             self.timeouts += 1
+            obs.emit("chaos", family="dispatch_timeout",
+                     spec=self.spec.name, dispatch=self.dispatches,
+                     burst_left=self._burst_left)
             raise DispatchTimeout(
                 f"chaos[{self.spec.name}]: injected dispatch timeout")
 

@@ -24,6 +24,7 @@ from typing import Dict, List, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.dataflow.fleet import FleetCampaign
 from repro.dataflow.runner import JobExperiment, RunStats
 from repro.dataflow.workloads import SCALEOUT_RANGE
@@ -184,18 +185,18 @@ def run_chaos_campaign(scenario_name: str,
              "job": "__fleet__", "engine": engine, "seed": seed,
              "fleet_size": len(exps), "wall_s_adaptive": wall,
              "restores": restores,
-             "svc_fallback_decisions": svc.fallback_decisions,
-             "svc_guardrail_trips": svc.guardrail_trips,
-             "svc_retries": svc.retries,
-             "svc_dispatch_failures": svc.dispatch_failures,
-             "svc_breaker_trips": svc.breaker_trips,
              "quarantined_rows": sum(
                  exp.trainer.cache.quarantined for exp in exps
                  if exp.trainer.cache is not None),
              "poisoned_fits": sum(exp.trainer.poisoned_fits
                                   for exp in exps)}
+    # service counters now live in the metrics registry; ``stats()`` is
+    # the registry-backed successor of the old hand-built svc_* block
+    fleet.update({f"svc_{k}": v for k, v in svc.stats().items()})
     if svc.fault_injector is not None:
         fleet["injected_timeouts"] = svc.fault_injector.timeouts
+    if obs.enabled():
+        fleet["controller_health"] = obs.registry().rows(prefix="enel_")
     rows.append(fleet)
     return rows
 

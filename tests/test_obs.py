@@ -1,0 +1,278 @@
+"""Controller flight recorder + metrics registry (ISSUE 9).
+
+Layers under test:
+
+* registry units: fixed-bucket histogram quantiles, merge-restore
+  semantics, Prometheus/JSONL exporters;
+* recorder units: bounded ring, gating, span lookup and causal links;
+* attribute-API compatibility: the service/trainer/cache counters moved
+  into the registry behind their original attributes;
+* S6 regression: a service checkpoint taken while the breaker is OPEN
+  restores breaker state AND the registry's metric labels identically;
+* neutrality: with observability disabled a campaign's decisions are
+  bit-exact vs the enabled twin and the timed reruns add zero jit traces;
+* fused == stepped span parity: replaying the two drivers' (bit-exact)
+  telemetry outputs yields identical span streams.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+import repro.core.campaign_kernel as ck
+from repro import obs
+from repro.core import model as enel_model
+from repro.core.service import CircuitBreaker, DecisionService
+from repro.dataflow import FleetCampaign, JobExperiment
+from repro.obs.metrics import (DEFAULT_LATENCY_BUCKETS, HistogramSeries,
+                               MetricsRegistry)
+from repro.obs.recorder import FlightRecorder
+
+
+# ---------------------------------------------------------------- registry
+
+def test_histogram_quantiles_without_samples():
+    h = HistogramSeries(buckets=(1.0, 2.0, 4.0, 8.0))
+    for v in (0.5, 1.5, 1.6, 3.0, 3.5, 7.0):
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 6 and abs(s["sum"] - 17.1) < 1e-9
+    assert s["min"] == 0.5 and s["max"] == 7.0
+    # quantiles interpolate inside the owning bucket, clamped to [min,max]
+    assert 1.0 <= s["p50"] <= 4.0
+    assert s["p95"] <= 7.0 and s["p99"] <= 7.0
+    h.observe(float("nan"))             # non-finite observations are dropped
+    assert h.count == 6
+    empty = HistogramSeries(buckets=DEFAULT_LATENCY_BUCKETS)
+    assert math.isnan(empty.quantile(0.5))
+
+
+def test_registry_merge_restore():
+    reg = MetricsRegistry()
+    c = reg.counter("t_total", "help").labels(svc="a")
+    c.inc(3)
+    snap = reg.snapshot()
+    c.inc(2)                                     # diverge after snapshot
+    reg.counter("t_total").labels(svc="b").inc(7)  # series born later
+    reg.gauge("t_new").labels().set(1.0)           # metric born later
+    reg.restore(snap)
+    assert reg.counter("t_total").labels(svc="a").value == 3  # rewound
+    assert reg.counter("t_total").labels(svc="b").value == 7  # untouched
+    assert reg.gauge("t_new").labels().value == 1.0           # untouched
+    with pytest.raises(ValueError):
+        reg.gauge("t_total")                     # kind collision is loud
+
+
+def test_prometheus_text_exporter():
+    reg = MetricsRegistry()
+    reg.counter("x_total", "things").labels(job="a").inc(2)
+    h = reg.histogram("lat_seconds", buckets=(0.1, 1.0)).labels(svc="s")
+    h.observe(0.05)
+    h.observe(0.5)
+    text = reg.prometheus_text()
+    assert "# TYPE x_total counter" in text
+    assert 'x_total{job="a"} 2' in text
+    assert 'lat_seconds_bucket{le="0.1",svc="s"} 1' in text
+    assert 'lat_seconds_bucket{le="+Inf",svc="s"} 2' in text
+    assert 'lat_seconds_count{svc="s"} 2' in text
+
+
+# ---------------------------------------------------------------- recorder
+
+def test_recorder_ring_gating_and_jsonl(tmp_path):
+    gate = {"on": True}
+    rec = FlightRecorder(capacity=4, gate=lambda: gate["on"])
+    seqs = [rec.emit("k", i=i) for i in range(6)]
+    assert len(rec) == 4 and rec.dropped == 2
+    assert rec.find(seqs[0]) is None             # evicted
+    assert rec.find(seqs[-1])["attrs"]["i"] == 5
+    gate["on"] = False
+    assert rec.emit("k", i=99) == -1 and len(rec) == 4
+    gate["on"] = True
+    path = tmp_path / "spans.jsonl"
+    text = rec.to_jsonl(str(path))
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert len(lines) == 4 and lines[-1]["attrs"]["i"] == 5
+    assert text.count("\n") == 4
+    st = rec.state()
+    rec2 = FlightRecorder(capacity=4)
+    rec2.load(st)
+    assert rec2.stream() == rec.stream()
+
+
+# ------------------------------------------------- attribute-API counters
+
+def test_service_counters_attribute_api():
+    svc = DecisionService(obs_name="t_api")
+    svc.decisions += 5
+    svc.retries += 2
+    assert svc.decisions == 5 and svc.retries == 2
+    st = svc.stats()
+    assert st["decisions"] == 5 and st["retries"] == 2
+    assert st["breaker_state"] == "closed"
+    rows = obs.registry().rows(prefix="enel_service_decisions_total")
+    assert any(r["labels"] == {"service": "t_api"} and r["value"] == 5
+               for r in rows)
+
+
+def test_breaker_mid_open_checkpoint_restores_state_and_labels():
+    """S6: checkpoint while the breaker is OPEN -> restore into a fresh
+    service with the same obs label; breaker state, counters AND registry
+    series (same labels) all match the moment of the snapshot."""
+    svc = DecisionService(obs_name="t_s6")
+    for _ in range(svc.breaker.threshold):
+        svc.breaker.record(False)
+    svc.dispatch_failures += 4
+    assert svc.breaker.state == CircuitBreaker.OPEN
+    snap = svc.snapshot_state()
+    trips0 = svc.breaker.trips
+
+    twin = DecisionService(obs_name="t_s6")      # fresh, label-identical
+    assert twin.breaker.state == CircuitBreaker.CLOSED
+    twin.restore_state(snap)
+    assert twin.breaker.state == CircuitBreaker.OPEN
+    assert twin.breaker.trips == trips0
+    assert twin.dispatch_failures == 4
+    # the one-hot state gauge tracks the restored state under the SAME label
+    gauge = obs.registry().get("enel_breaker_state")
+    assert gauge.labels(service="t_s6", state="open").value == 1.0
+    assert gauge.labels(service="t_s6", state="closed").value == 0.0
+    rows = obs.registry().rows(prefix="enel_breaker_trips_total")
+    assert any(r["labels"] == {"service": "t_s6"} and r["value"] == trips0
+               for r in rows)
+
+
+def test_obs_snapshot_roundtrips_registry_and_recorder():
+    obs.observe("t_rt_seconds", 0.2, phase="x")
+    seq = obs.emit("t.span", a=1)
+    snap = obs.snapshot()
+    assert isinstance(json.dumps(snap, default=str), str)  # pickle/json safe
+    obs.observe("t_rt_seconds", 0.9, phase="x")
+    obs.restore(snap)
+    h = obs.registry().get("t_rt_seconds").labels(phase="x")
+    assert h.count == 1                          # rewound to snapshot
+    if seq >= 0:
+        assert obs.recorder().find(seq) is not None
+
+
+# ------------------------------------------------------ campaign neutrality
+
+def _twin_campaign(n_profile=2):
+    exps = [JobExperiment(k, seed=50 + i, candidate_stride=4)
+            for i, k in enumerate(("lr", "kmeans", "gbt"))]
+    camp = FleetCampaign(exps, DecisionService(seed=3), engine="batched")
+    camp.profile(n_profile)
+    return camp
+
+
+def _decision_trace(all_stats):
+    return [(round(s.runtime, 6), tuple(s.scaleouts), round(s.violation, 6),
+             s.fallback_decisions, s.n_rescales)
+            for run in all_stats for s in run]
+
+
+@pytest.mark.slow
+def test_disabled_obs_is_bit_exact_and_trace_neutral():
+    """ENEL_OBS=0 contract on a 3-job stepped campaign: identical decision
+    trace, and the disabled run adds exactly as many jit traces as an
+    enabled twin on the warmed caches (i.e. zero extra)."""
+    with obs.obs_enabled(True):
+        stats_on, _ = _twin_campaign().adaptive_campaign(2, "enel", False)
+    before = dict(enel_model.TRACE_COUNTS)
+    with obs.obs_enabled(False):
+        stats_off, _ = _twin_campaign().adaptive_campaign(2, "enel", False)
+    delta_off = {k: v - before.get(k, 0)
+                 for k, v in enel_model.TRACE_COUNTS.items()
+                 if v - before.get(k, 0)}
+    before = dict(enel_model.TRACE_COUNTS)
+    with obs.obs_enabled(True):
+        stats_on2, _ = _twin_campaign().adaptive_campaign(2, "enel", False)
+    delta_on = {k: v - before.get(k, 0)
+                for k, v in enel_model.TRACE_COUNTS.items()
+                if v - before.get(k, 0)}
+    assert _decision_trace(stats_off) == _decision_trace(stats_on)
+    assert _decision_trace(stats_on2) == _decision_trace(stats_on)
+    assert delta_off == delta_on        # disabling adds/removes no compiles
+
+
+@pytest.mark.slow
+def test_fused_telemetry_off_bit_exact():
+    """The telemetry=False plan compiles the pre-observability jaxpr: same
+    decisions/clocks as the telemetry=True twin, no tel_* outputs, and
+    reruns add zero traces."""
+    import jax
+    p1 = ck.build_plan(_twin_campaign().experiments, 2, telemetry=True)
+    p0 = ck.build_plan(_twin_campaign().experiments, 2, telemetry=False)
+    _, ys1 = ck.run_fused(p1)
+    _, ys0 = ck.run_fused(p0)
+    jax.block_until_ready((ys1, ys0))
+    assert any(k.startswith("tel_") for k in ys1)
+    assert not any(k.startswith("tel_") for k in ys0)
+    np.testing.assert_array_equal(np.asarray(ys1["z"]), np.asarray(ys0["z"]))
+    np.testing.assert_array_equal(np.asarray(ys1["decided"]),
+                                  np.asarray(ys0["decided"]))
+    np.testing.assert_array_equal(np.asarray(ys1["clock"]),
+                                  np.asarray(ys0["clock"]))
+    t0 = enel_model.trace_count("fused_campaign")
+    jax.block_until_ready(ck.run_fused(p0)[1])
+    jax.block_until_ready(ck.run_fused(p1)[1])
+    assert enel_model.trace_count("fused_campaign") == t0
+
+
+@pytest.mark.slow
+def test_fused_vs_stepped_span_parity():
+    """Replaying the fused and stepped drivers' telemetry yields identical
+    (kind, attrs) span streams — the drivers are bit-exact, so the flight
+    recorder must be too."""
+    camp = _twin_campaign()
+    plan = ck.build_plan(camp.experiments, 2, telemetry=True)
+    _, ys_f = ck.run_fused(plan)
+    _, ys_s = ck.run_stepped(plan)
+    rec = obs.recorder()
+    rec.clear()
+    n_f = ck.replay_spans(plan, ys_f)
+    stream_f = rec.stream()
+    rec.clear()
+    n_s = ck.replay_spans(plan, ys_s)
+    stream_s = rec.stream()
+    rec.clear()
+    assert n_f == n_s and n_f > 0
+    assert stream_f == stream_s
+    kinds = {k for k, _ in stream_f}
+    assert {"decision.pick", "fit", "run.end"} <= kinds
+
+
+def test_fallback_spans_link_to_cause():
+    """Every decision.fallback span names its cause and links to the
+    causing span (guardrail trip / dispatch fault / breaker transition)."""
+    rec = obs.recorder()
+    rec.clear()
+    svc = DecisionService(obs_name="t_cause", max_retries=0)
+    calls = {"n": 0}
+
+    def chaos():
+        calls["n"] += 1
+        from repro.core.service import DispatchTimeout
+        raise DispatchTimeout("injected")
+
+    svc.fault_injector = chaos
+    exp = JobExperiment("kmeans", seed=2, candidate_stride=4)
+    exp.profile(2)
+    from repro.dataflow.runner import _future_nodes, _to_graph
+    builder = lambda ci, a, z, pr: _to_graph(
+        _future_nodes(exp.encoder, exp.job, ci, a, z), pr, ci)
+    req = exp.enel.prepare_request(
+        graph_builder=builder, next_comp=1,
+        n_components=exp.job.n_components, elapsed=10.0,
+        current_scaleout=8, target_runtime=exp.target)
+    svc.decide([req])
+    falls = rec.events("decision.fallback")
+    assert falls, "injected dispatch failure must produce fallback spans"
+    for ev in falls:
+        at = ev["attrs"]
+        assert at["cause"] in ("guardrail", "breaker_open",
+                               "retries_exhausted", "shed")
+        if at["cause_seq"] >= 0:
+            cause = rec.find(at["cause_seq"])
+            assert cause is not None and cause["seq"] < ev["seq"]
